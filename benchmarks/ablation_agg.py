@@ -1,0 +1,97 @@
+"""Ablation: mask-aware hetero aggregation vs naive averaging.
+
+The paper poses hetero-gradient aggregation as an open problem (§3.2).
+This ablation quantifies why the naive answer is wrong: averaging
+gradients from differently-pruned models WITHOUT per-parameter mask
+renormalization attenuates every weight that any client pruned
+(a weight kept by 1 of 4 clients gets 1/4 of its gradient), which slows
+or stalls the global model. Same fleet, same data, same seeds — only the
+denominator differs.
+
+CSV: ablation/{mask_aware|naive}  us_per_call=round time  derived=loss/acc.
+"""
+from __future__ import annotations
+
+import functools
+import time
+import types
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.paper_mlp import config
+from repro.core.aggregation import hetero_aggregate, zeros_like_acc, accumulate
+from repro.core.compression import DEVICE_TIERS, compress_params
+from repro.data import make_gaussian_dataset, partition_iid
+from repro.models import mlp
+
+ROUNDS = 60
+TIERS = ("hub", "mid", "low", "low")
+
+
+def naive_aggregate(grads_list, masks_list, weights):
+    """FedSGD averaging that ignores masks (what you'd do if the models
+    were identical — the McMahan baseline applied out of scope)."""
+    tot = sum(weights)
+    return jax.tree.map(lambda *g: sum(w * x for w, x in zip(weights, g)) / tot,
+                        *grads_list)
+
+
+def run_one(aggregator, seed=0):
+    key = jax.random.PRNGKey(seed)
+    cfg = config()
+    params = mlp.init(key, cfg)
+    data = make_gaussian_dataset(key, 1600)
+    shards = partition_iid(key, data, len(TIERS))
+    plans = [DEVICE_TIERS[t] for t in TIERS]
+
+    @jax.jit
+    def grads_of(params, shard_idx):
+        pass  # per-plan jit below
+
+    grad_fns = []
+    for plan in plans:
+        def f(params, batch, plan=plan):
+            def loss_of(p):
+                cp, masks = compress_params(p, plan)
+                return mlp.loss_fn(cp, batch), masks
+            (loss, masks), g = jax.value_and_grad(loss_of, has_aux=True)(params)
+            return loss, g, masks
+        grad_fns.append(jax.jit(f))
+
+    losses = []
+    t0 = time.perf_counter()
+    for r in range(ROUNDS):
+        gs, ms, ls = [], [], []
+        for fn, shard in zip(grad_fns, shards):
+            loss, g, masks = fn(params, shard)
+            gs.append(g)
+            ms.append(masks)
+            ls.append(float(loss))
+        agg = aggregator(gs, ms, [p.weight for p in plans])
+        params = jax.tree.map(lambda p, g: p - 1.0 * g, params, agg)
+        losses.append(sum(ls) / len(ls))
+    dt = (time.perf_counter() - t0) / ROUNDS
+    val = make_gaussian_dataset(jax.random.PRNGKey(9), 1000)
+    acc = float(mlp.accuracy(params, val["x"], val["y"]))
+    return dt, losses[-1], acc
+
+
+def run() -> list[tuple]:
+    rows = []
+    for name, agg in (("mask_aware", hetero_aggregate),
+                      ("naive", naive_aggregate)):
+        accs, losses, dts = [], [], []
+        for seed in range(3):
+            dt, loss, acc = run_one(agg, seed)
+            dts.append(dt), losses.append(loss), accs.append(acc)
+        rows.append((f"ablation/{name}", sum(dts) / 3 * 1e6,
+                     f"final_loss={sum(losses)/3:.4f};"
+                     f"val_acc={sum(accs)/3:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

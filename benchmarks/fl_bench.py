@@ -1,0 +1,87 @@
+"""Federated-round benches: the paper's Table-equivalent system numbers.
+
+- fl/round_{mode}: wall time of one client-granular federated round on the
+  paper MLP fleet (4 tiers), derived = final loss after 30 rounds.
+- fl/eq1_{tier}: the paper's Eq. (1) analytic round time per device tier
+  for the granite-3-2b model, derived = component breakdown.
+- fl/tierstep_{arch}: one datacenter tier-scanned hetero train step
+  (smoke config), derived = loss delta over 5 steps.
+"""
+from __future__ import annotations
+
+import functools
+import time
+import types
+
+import jax
+
+from repro import optim
+from repro.configs import get_smoke_config
+from repro.configs.paper_mlp import config as mlp_config
+from repro.core import TrainState, make_hetero_train_step
+from repro.core.compression import DEVICE_TIERS, default_tier_plans
+from repro.core.federated import Client, FLServer
+from repro.core.heterogeneity import PROFILES, round_time
+from repro.data import make_gaussian_dataset, partition_iid
+from repro.models import get_model, mlp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> list[tuple]:
+    rows = []
+    cfg = mlp_config()
+    data = make_gaussian_dataset(KEY, 1600)
+    shards = partition_iid(KEY, data, 4)
+    model = types.SimpleNamespace(loss_fn=functools.partial(mlp.loss_fn))
+    tiers = ("hub", "high", "mid", "low")
+
+    for mode in ("fedsgd", "fedavg"):
+        clients = [Client(i, DEVICE_TIERS[t], shards[i], profile_name=t)
+                   for i, t in enumerate(tiers)]
+        srv = FLServer(model=model, optimizer=optim.sgd(1.0), clients=clients,
+                       params=mlp.init(KEY, cfg), mode=mode, local_steps=5,
+                       local_lr=1.0)
+        srv.round()                      # compile
+        t0 = time.perf_counter()
+        for _ in range(30):
+            rec = srv.round()
+        us = (time.perf_counter() - t0) / 30 * 1e6
+        rows.append((f"fl/round_{mode}", us,
+                     f"loss_after_30={rec['loss']:.4f};"
+                     f"upload_bytes={rec['total_upload_bytes']:.0f}"))
+
+    gcfg = get_smoke_config("granite-3-2b")
+    gmodel = get_model(gcfg)
+    gparams = gmodel.init(KEY)
+    for tier in ("hub", "mid", "embedded"):
+        t = round_time(gparams, DEVICE_TIERS[tier], PROFILES[tier], 256)
+        rows.append((f"fl/eq1_{tier}", t["T"] * 1e6,
+                     f"T_local={t['T_local']:.3f}s;T_up={t['T_upload']:.3f}s;"
+                     f"T_down={t['T_download']:.3f}s;"
+                     f"payload={t['payload_bytes']:.0f}B"))
+
+    for arch in ("granite-3-2b", "granite-moe-1b-a400m", "zamba2-2.7b"):
+        acfg = get_smoke_config(arch)
+        amodel = get_model(acfg)
+        opt = optim.adamw(3e-3)
+        state = TrainState.create(amodel, opt, KEY)
+        step = jax.jit(make_hetero_train_step(amodel, opt,
+                                              default_tier_plans(4)))
+        batch = {"tokens": jax.random.randint(KEY, (4, 2, 33), 0,
+                                              acfg.vocab_size)}
+        state, m0 = step(state, batch)   # compile
+        t0 = time.perf_counter()
+        loss0 = float(m0["loss"])
+        for _ in range(5):
+            state, m = step(state, batch)
+        jax.block_until_ready(state)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append((f"fl/tierstep_{arch}", us,
+                     f"loss_delta_5steps={loss0 - float(m['loss']):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,113 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run JSONs.
+
+  compute   = HLO_FLOPs_global  / (chips * 197e12  bf16 FLOP/s)
+  memory    = traffic_bytes_glob/ (chips * 819e9   HBM B/s)
+  collective= per-device collective bytes / 50e9   ICI B/s per link
+              (the dry-run HLO is the per-device module, so its collective
+              result bytes are already per-chip; dividing global bytes by
+              chips — the brief's formula — is the same quantity)
+
+FLOPs/traffic come from the scan-aware jaxpr walk (launch/analysis.py);
+collective bytes from the trip-count-aware HLO walk (launch/dryrun.py).
+
+  PYTHONPATH=src python -m benchmarks.roofline            # table + markdown
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+_SUGGEST = {
+    "compute": "reduce redundant FLOPs: drop remat for non-saturated layers, "
+               "cast matmuls to bf16, raise per-chip batch",
+    "memory": "fuse weight-compression into matmuls (masked_matmul kernel), "
+              "keep activations bf16, increase arithmetic intensity per pass",
+    "collective": "re-shard: move attention fallback all-reduces to head/"
+                  "fsdp sharding, overlap collectives with compute, "
+                  "reduce-scatter gradients instead of all-reduce",
+}
+
+
+def chips_of(mesh: str) -> int:
+    n = 1
+    for d in mesh.split("x"):
+        n *= int(d)
+    return n
+
+
+def load_records(path: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(path, "*.json"))):
+        r = json.load(open(fn))
+        if r.get("status") != "ok":
+            continue
+        recs.append(r)
+    return recs
+
+
+def terms(r: dict) -> dict:
+    chips = chips_of(r["mesh"])
+    compute = r["flops"] / chips / PEAK_FLOPS
+    memory = r["traffic_bytes"] / chips / HBM_BW
+    coll = r["collectives"]["total_bytes"] / ICI_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", coll), key=lambda kv: kv[1])[0]
+    mult = 6 if r["mode"] == "train" else 2
+    model_flops = mult * r["params"]["active"] * r["tokens_per_step"]
+    step_time = max(compute, memory, coll)          # no-overlap upper bound
+    mfu = model_flops / chips / PEAK_FLOPS / max(step_time, 1e-30)
+    return {"compute_s": compute, "memory_s": memory, "collective_s": coll,
+            "dominant": dom, "model_flops": model_flops,
+            "model_over_hlo": model_flops / max(r["flops"], 1.0),
+            "roofline_frac": mfu,
+            "suggest": _SUGGEST[dom]}
+
+
+def table(recs: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | compute(s) | memory(s) | collective(s) |"
+            " dominant | 6ND/HLO | roofline-frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    recs = sorted(recs, key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]),
+                                       r["mesh"]))
+    for r in recs:
+        t = terms(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | {t['dominant']} "
+            f"| {t['model_over_hlo']:.2f} | {t['roofline_frac']:.3f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    recs = load_records()
+    if not recs:
+        print("no dry-run records; run: python -m repro.launch.dryrun")
+        return
+    md = table(recs)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.md", "w") as f:
+        f.write("# Roofline table (from dry-run)\n\n" + md + "\n")
+    print(md)
+    # summary: most interesting pairs for hillclimbing
+    single = [r for r in recs if r["mesh"] == "16x16"]
+    worst = min(single, key=lambda r: terms(r)["roofline_frac"])
+    most_coll = max(single, key=lambda r: terms(r)["collective_s"]
+                    / max(max(terms(r)["compute_s"], terms(r)["memory_s"]),
+                          1e-30))
+    print(f"\nworst roofline fraction: {worst['arch']} {worst['shape']} "
+          f"({terms(worst)['roofline_frac']:.4f})")
+    print(f"most collective-bound:   {most_coll['arch']} {most_coll['shape']} "
+          f"(coll/max_other={terms(most_coll)['collective_s'] / max(max(terms(most_coll)['compute_s'], terms(most_coll)['memory_s']), 1e-30):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Client-granular FL simulation — the paper's full system loop with an
+8-device heterogeneous IoT fleet on non-IID data, comparing:
+
+  1. uncompressed FedSGD (McMahan et al. baseline — all devices big enough)
+  2. hetero-compressed FedSGD (our mask-aware aggregation)
+  3. hetero-compressed FedAvg (5 local steps, compressed-space training)
+
+and reporting the paper's Eq. (1) per-round wall time + upload bytes.
+
+  PYTHONPATH=src python examples/hetero_fl_sim.py
+"""
+import functools
+import types
+
+import jax
+
+from repro import optim
+from repro.configs.paper_mlp import config
+from repro.core.compression import DEVICE_TIERS
+from repro.core.federated import Client, FLServer
+from repro.data import make_gaussian_dataset, partition_dirichlet
+from repro.models import mlp
+
+ROUNDS = 60
+FLEET = ["hub", "high", "high", "mid", "mid", "low", "low", "embedded"]
+
+key = jax.random.PRNGKey(0)
+cfg = config()
+data = make_gaussian_dataset(key, 4000)
+shards = partition_dirichlet(key, data, len(FLEET), alpha=0.5)
+val = make_gaussian_dataset(jax.random.PRNGKey(9), 1000)
+model = types.SimpleNamespace(loss_fn=functools.partial(mlp.loss_fn))
+
+
+def fleet(tiers):
+    return [Client(i, DEVICE_TIERS[t], shards[i], profile_name=t)
+            for i, t in enumerate(tiers)]
+
+
+def run(name, tiers, mode, **kw):
+    srv = FLServer(model=model, optimizer=optim.sgd(1.0),
+                   clients=fleet(tiers), params=mlp.init(key, cfg),
+                   mode=mode, **kw)
+    for _ in range(ROUNDS):
+        rec = srv.round()
+    acc = float(mlp.accuracy(srv.params, val["x"], val["y"]))
+    print(f"{name:28s} loss={rec['loss']:.4f} val_acc={acc:.3f} "
+          f"round_wall={rec['round_wall_time']:.3f}s "
+          f"upload={rec['total_upload_bytes'] / 1e3:.1f}kB")
+    return acc
+
+
+print(f"fleet: {FLEET}\n")
+run("fedsgd (all-hub baseline)", ["hub"] * len(FLEET), "fedsgd")
+run("fedsgd hetero-compressed", FLEET, "fedsgd")
+run("fedavg hetero-compressed", FLEET, "fedavg", local_steps=5, local_lr=1.0)
+run("fedsgd hetero + fp8 upload+EF", FLEET, "fedsgd",
+    upload_quant="fp8_e4m3", error_feedback=True)
+print("\nnote: the compressed fleet trains the SAME global model while the "
+      "low tiers ship 4-25x smaller payloads (the paper's Eq. 1 win).")

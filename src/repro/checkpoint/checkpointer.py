@@ -1,0 +1,104 @@
+"""Minimal dependency-free pytree checkpointer (npz + JSON treedef).
+
+Leaves are flattened with stable path-derived names into a single .npz;
+the tree structure is stored alongside as JSON so arbitrary nested
+dict/list/tuple states (params + optimizer + step) round-trip exactly.
+Atomic rename, retention of the last `keep` steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _paths_and_leaves(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        names.append(name)
+        leaves.append(np.asarray(leaf))
+    return names, leaves, treedef
+
+
+def save_pytree(tree, path: str) -> None:
+    names, leaves, treedef = _paths_and_leaves(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".npz")
+    os.close(fd)
+    # bfloat16 has no numpy dtype serialization in npz: view as uint16
+    arrays, meta = {}, {}
+    for i, (n, a) in enumerate(zip(names, leaves)):
+        key = f"a{i}"
+        if a.dtype == jnp.bfloat16:
+            arrays[key] = a.view(np.uint16)
+            meta[key] = {"name": n, "dtype": "bfloat16"}
+        else:
+            arrays[key] = a
+            meta[key] = {"name": n, "dtype": str(a.dtype)}
+    np.savez(tmp, __meta__=np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+    os.replace(tmp, path)
+
+
+def load_pytree(template, path: str):
+    """Restore into the structure of `template` (names must match)."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        by_name = {}
+        for key, m in meta.items():
+            a = z[key]
+            if m["dtype"] == "bfloat16":
+                a = a.view(jnp.bfloat16)
+            by_name[m["name"]] = a
+    names, leaves, _ = _paths_and_leaves(template)
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    out = []
+    for n, tmpl in zip(names, flat):
+        if n not in by_name:
+            raise KeyError(f"checkpoint missing leaf {n!r}")
+        a = by_name[n]
+        if tuple(a.shape) != tuple(tmpl.shape):
+            raise ValueError(f"shape mismatch for {n}: {a.shape} vs {tmpl.shape}")
+        out.append(jnp.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def save(self, tree, step: int) -> str:
+        p = self._path(step)
+        save_pytree(tree, p)
+        self._gc()
+        return p
+
+    def latest_step(self) -> int | None:
+        steps = [int(m.group(1)) for f in os.listdir(self.dir)
+                 if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+        return max(steps) if steps else None
+
+    def restore(self, template, step: int | None = None):
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return load_pytree(template, self._path(step)), step
+
+    def _gc(self) -> None:
+        steps = sorted([int(m.group(1)) for f in os.listdir(self.dir)
+                        if (m := re.match(r"ckpt_(\d+)\.npz$", f))])
+        for s in steps[:-self.keep]:
+            os.remove(self._path(s))

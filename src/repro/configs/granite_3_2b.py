@@ -1,0 +1,21 @@
+"""granite-3-2b [dense] — GQA. [hf:ibm-granite/granite-3.0-2b-base]"""
+from repro.configs.base import ModelConfig, smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-2b",
+        family="dense",
+        num_layers=40,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=49155,
+        tie_embeddings=True,
+        source="hf:ibm-granite/granite-3.0-2b-base",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

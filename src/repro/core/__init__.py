@@ -1,0 +1,3 @@
+from repro.core.aggregation import hetero_aggregate  # noqa: F401
+from repro.core.steps import (TrainState, make_hetero_train_step,
+                              make_serve_step, make_prefill_step)  # noqa: F401

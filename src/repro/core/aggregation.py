@@ -1,0 +1,57 @@
+"""Heterogeneous gradient aggregation — the algorithm the paper poses as an
+open problem (§3.2/§7.3): combine gradients from local models that are
+compressed DIFFERENTLY (different pruning masks, quant formats, codebooks)
+into one update for the uncompressed global model.
+
+Mask-aware weighted aggregation:
+
+    g[i] = sum_t w_t * m_t[i] * g_t[i]  /  max(sum_t w_t * m_t[i], eps)
+
+Per-parameter renormalization by the surviving mask weight means a weight
+pruned on some tiers still receives a full-magnitude update from the tiers
+that kept it (instead of being attenuated toward zero), and a weight pruned
+everywhere receives exactly zero. When no tier compresses anything this
+reduces EXACTLY to weighted FedSGD averaging (property-tested).
+
+Quantized tiers contribute straight-through gradients (clip-aware STE);
+clustered tiers contribute identity-STE gradients. Cross-device averaging
+within a tier is the mesh's data-parallel mean (pjit global semantics), so
+this module only handles the cross-tier dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def accumulate(acc, grads, masks, weight):
+    """One tier's contribution to the (numerator, denominator) accumulators."""
+    num, den = acc
+    num = jax.tree.map(lambda a, g, m: a + weight * m * g, num, grads, masks)
+    den = jax.tree.map(lambda a, m: a + weight * m, den, masks)
+    return num, den
+
+
+def zeros_like_acc(params):
+    num = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # denominators match mask shapes: full for >=2-D leaves, scalar otherwise
+    den = jax.tree.map(
+        lambda p: jnp.zeros(p.shape if p.ndim >= 2 else (), jnp.float32), params)
+    return num, den
+
+
+def finalize(acc):
+    num, den = acc
+    return jax.tree.map(lambda n, d: (n / jnp.maximum(d, EPS)).astype(n.dtype),
+                        num, den)
+
+
+def hetero_aggregate(tier_grads, tier_masks, weights):
+    """Direct (non-scanned) aggregation over a list of tiers — used by the
+    FL simulator and tests. tier_grads/tier_masks: list of pytrees."""
+    acc = zeros_like_acc(tier_grads[0])
+    for g, m, w in zip(tier_grads, tier_masks, weights):
+        acc = accumulate(acc, g, m, jnp.float32(w))
+    return finalize(acc)

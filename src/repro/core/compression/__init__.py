@@ -1,0 +1,8 @@
+from repro.core.compression.plan import (CompressionPlan, DEVICE_TIERS,
+                                         plan_arrays, default_tier_plans)  # noqa: F401
+from repro.core.compression.pruning import magnitude_mask  # noqa: F401
+from repro.core.compression.quantization import fake_quant_ste  # noqa: F401
+from repro.core.compression.clustering import (cluster_ste,
+                                               kmeans_codebook)  # noqa: F401
+from repro.core.compression.apply import (compress_params, compress_with_masks,
+                                          compressible, payload_bits)  # noqa: F401

@@ -1,0 +1,100 @@
+"""Apply a compression plan to a whole parameter pytree.
+
+Policy: only matrix-shaped leaves (ndim >= 2) are compressed; 1-D leaves
+(norm scales, gates, biases, SSM dt/A parameters — quantization-sensitive)
+and the MoE router (load-balance stability) stay full precision. This is
+the standard practice the paper's framework would expose as configuration.
+
+Two entry points:
+  - ``compress_with_masks(params, density, e_bits, m_bits)``: traced per-tier
+    scalars, prune+quant only — used by the tier-scanned datacenter step.
+  - ``compress_params(params, plan)``: static CompressionPlan, adds k-means
+    clustering — used by the per-client FL simulator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.clustering import cluster_ste
+from repro.core.compression.plan import CompressionPlan
+from repro.core.compression.pruning import magnitude_mask
+from repro.core.compression.quantization import fake_quant_ste
+
+_EXCLUDE = ("router",)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def compressible(path, leaf) -> bool:
+    p = _path_str(path)
+    if any(x in p for x in _EXCLUDE):
+        return False
+    return getattr(leaf, "ndim", len(getattr(leaf, "shape", ()))) >= 2
+
+
+def compress_with_masks(params, density, e_bits, m_bits, out_dtype=None):
+    """Traced-scalar compression (prune -> fake-quant, both STE).
+
+    Returns (compressed_params, masks) where masks has a full-size 0/1 leaf
+    for compressible params and a scalar 1.0 for excluded ones (so the
+    mask-aware aggregation denominators broadcast correctly).
+
+    out_dtype (§Perf): casting compressed weights to the model's compute
+    dtype HERE is numerically identical to the cast the matmuls do anyway,
+    but halves the bytes of every cross-shard weight movement the
+    partitioner inserts downstream (measured on qwen2.5-32b train_4k).
+    The cast's VJP restores f32 cotangents, so aggregation is unaffected.
+    """
+    def one(path, w):
+        if not compressible(path, w):
+            return w, jnp.float32(1.0)
+        m = magnitude_mask(w, density)
+        cw = fake_quant_ste(w * m, e_bits, m_bits) * m
+        if out_dtype is not None:
+            cw = cw.astype(out_dtype)
+        return cw, m.astype(jnp.float32)
+
+    flat = jax.tree_util.tree_map_with_path(lambda p, w: one(p, w), params)
+    cparams = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    masks = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return cparams, masks
+
+
+def compress_params(params, plan: CompressionPlan):
+    """Static-plan compression including clustering. Returns (cparams, masks)."""
+    e, m = plan.quant_em()
+
+    def one(path, w):
+        if not compressible(path, w):
+            return w, jnp.float32(1.0)
+        mask = (magnitude_mask(w, plan.density) if plan.density < 1.0
+                else jnp.ones_like(w))
+        cw = w * mask
+        if plan.cluster_k:
+            cw = cluster_ste(cw, plan.cluster_k) * mask
+        if e or m:
+            cw = fake_quant_ste(cw, e, m) * mask
+        return cw, mask.astype(jnp.float32)
+
+    flat = jax.tree_util.tree_map_with_path(lambda p, w: one(p, w), params)
+    cparams = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    masks = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return cparams, masks
+
+
+def payload_bits(params, plan: CompressionPlan) -> float:
+    """Model/gradient payload size in bits under a plan (the paper's
+    T_upload/T_download communication model)."""
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = leaf.size
+        if compressible(path, leaf):
+            total += n * plan.density * plan.bits_per_weight
+            if plan.cluster_k:
+                total += plan.cluster_k * 32          # codebook overhead
+        else:
+            total += n * 32
+    return total

@@ -1,0 +1,61 @@
+"""Weight clustering: per-tensor k-means codebook (Lloyd iterations,
+quantile-initialized) + straight-through reconstruction.
+
+Codebook size is static (array shapes), so clustering tiers run in the
+per-client FL simulator rather than the tier-scanned datacenter step.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+SAMPLE = 1 << 14
+
+
+def kmeans_codebook(w: jax.Array, k: int, iters: int = 8) -> jax.Array:
+    """(k,) codebook over the values of w (1-D Lloyd on a subsample)."""
+    flat = w.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    if n > SAMPLE:
+        flat = lax.slice(flat, (0,), (SAMPLE * (n // SAMPLE),), (n // SAMPLE,))
+    s = jnp.sort(flat)
+    init = s[jnp.clip(((jnp.arange(k) + 0.5) / k * s.shape[0]).astype(jnp.int32),
+                      0, s.shape[0] - 1)]
+
+    def lloyd(cb, _):
+        d = jnp.abs(flat[:, None] - cb[None, :])          # (n, k)
+        assign = jnp.argmin(d, axis=1)
+        oh = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+        tot = oh.sum(0)
+        cb_new = (oh.T @ flat) / jnp.maximum(tot, 1.0)
+        cb_new = jnp.where(tot > 0, cb_new, cb)           # keep empty clusters
+        return cb_new, None
+
+    cb, _ = lax.scan(lloyd, init, None, length=iters)
+    return cb
+
+
+def assign_codebook(w: jax.Array, cb: jax.Array) -> jax.Array:
+    """Nearest-codeword index per weight (int32)."""
+    d = jnp.abs(w[..., None].astype(jnp.float32) - cb)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def cluster_ste(w, k: int, iters: int = 8):
+    cb = kmeans_codebook(w, k, iters)
+    return cb[assign_codebook(w, cb)].astype(w.dtype)
+
+
+def _fwd(w, k, iters):
+    return cluster_ste(w, k, iters), None
+
+
+def _bwd(k, iters, _, g):
+    return (g,)
+
+
+cluster_ste.defvjp(_fwd, _bwd)

@@ -1,0 +1,79 @@
+"""Compression plans: one per device tier (the paper's device heterogeneity).
+
+A plan combines the paper's three techniques — pruning (keep-density),
+quantization (any (e,m) float format or int-k), clustering (k-means
+codebook) — to different degrees per tier. ``plan_arrays`` stacks a list of
+plans into traced scalar arrays so a single jitted federated step can scan
+over tiers (SPMD-clean: no per-tier retracing/unrolling).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.numerics import FORMATS
+
+
+@dataclass(frozen=True)
+class CompressionPlan:
+    name: str
+    density: float = 1.0          # pruning keep-fraction (1.0 = no pruning)
+    quant: str | None = None      # float format name, "intK", or None
+    cluster_k: int = 0            # k-means codebook size (0 = off)
+    weight: float = 1.0           # aggregation weight (e.g. #devices in tier)
+
+    def quant_em(self) -> tuple[int, int]:
+        """(e_bits, m_bits); (0, 0) means quantization off."""
+        if self.quant is None or self.quant == "fp32":
+            return (0, 0)
+        if self.quant.startswith("int"):
+            # int-k is handled separately; encode as e=0, m=k
+            return (0, int(self.quant[3:]))
+        f = FORMATS[self.quant]
+        return (f.e_bits, f.m_bits)
+
+    @property
+    def bits_per_weight(self) -> float:
+        """Effective storage bits per (kept) weight — drives the comm model."""
+        if self.cluster_k:
+            import math
+            return math.log2(self.cluster_k)
+        if self.quant is None or self.quant == "fp32":
+            return 32.0
+        if self.quant.startswith("int"):
+            return float(self.quant[3:])
+        return float(FORMATS[self.quant].bits)
+
+
+# The tier system used throughout examples/benchmarks: an IoT fleet from
+# server-class hub down to MCU-class embedded devices.
+DEVICE_TIERS: dict[str, CompressionPlan] = {
+    "hub":      CompressionPlan("hub"),
+    "high":     CompressionPlan("high", quant="fp8_e4m3", weight=1.0),
+    "mid":      CompressionPlan("mid", density=0.5, quant="bf16"),
+    "low":      CompressionPlan("low", density=0.25, quant="fp8_e5m2"),
+    "embedded": CompressionPlan("embedded", density=0.25, quant="fp4_e2m1",
+                                cluster_k=16),
+}
+
+
+def default_tier_plans(n_tiers: int = 4) -> list[CompressionPlan]:
+    order = ["hub", "high", "mid", "low", "embedded"]
+    return [DEVICE_TIERS[k] for k in order[:n_tiers]]
+
+
+def plan_arrays(plans: list[CompressionPlan]) -> dict:
+    """Stack plans into scan-able arrays of per-tier scalars.
+
+    Note: cluster_k cannot be traced (codebook shape is static), so scanned
+    steps support prune+quant tiers; clustering runs in the per-client FL
+    simulator where plans are static. Documented in DESIGN.md.
+    """
+    em = [p.quant_em() for p in plans]
+    return {
+        "density": jnp.array([p.density for p in plans], jnp.float32),
+        "e_bits": jnp.array([e for e, _ in em], jnp.int32),
+        "m_bits": jnp.array([m for _, m in em], jnp.int32),
+        "weight": jnp.array([p.weight for p in plans], jnp.float32),
+    }

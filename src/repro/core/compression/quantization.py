@@ -1,0 +1,43 @@
+"""Fake quantization with a clip-aware straight-through estimator.
+
+Forward: exact (e,m)-format rounding (repro.numerics) or int-k. Backward:
+identity inside the representable range, zero outside (clip-aware STE) —
+the gradient the global model receives from a quantized local model.
+e/m may be traced scalars (0 bits = passthrough), enabling tier-scanning.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.numerics import max_finite, quantize_em
+from repro.numerics.float_formats import quantize_int
+
+
+def _quant(x, e_bits, m_bits):
+    """Dispatch: e>0 -> (e,m) float; e==0,m>0 -> int-m; e==m==0 -> passthrough."""
+    qf = quantize_em(x, jnp.maximum(e_bits, 1), jnp.maximum(m_bits, 1))
+    qi = quantize_int(x, jnp.maximum(m_bits, 1))
+    out = jnp.where(e_bits > 0, qf, jnp.where(m_bits > 0, qi, x))
+    return out
+
+
+@jax.custom_vjp
+def fake_quant_ste(x, e_bits, m_bits):
+    return _quant(x, e_bits, m_bits)
+
+
+def _fwd(x, e_bits, m_bits):
+    y = _quant(x, e_bits, m_bits)
+    maxv = jnp.where(e_bits > 0, max_finite(jnp.maximum(e_bits, 1),
+                                            jnp.maximum(m_bits, 1)),
+                     jnp.float32(jnp.inf))
+    in_range = (jnp.abs(x) <= maxv) | (e_bits <= 0)
+    return y, in_range
+
+
+def _bwd(in_range, g):
+    return (jnp.where(in_range, g, 0.0).astype(g.dtype), None, None)
+
+
+fake_quant_ste.defvjp(_fwd, _bwd)

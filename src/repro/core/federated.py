@@ -1,0 +1,159 @@
+"""The federated runtime (paper Fig. 1), client-granular.
+
+This is the faithful simulator of the paper's system loop:
+
+  global model --compress(plan_c)--> local model on device c
+  local model  --train on local data--> gradients (or deltas)
+  gradients    --upload (optionally quantized, with error feedback)--> server
+  server       --hetero-aggregate + optimizer step--> new global model
+  repeat.
+
+Two aggregation modes (paper §4.2):
+  - fedsgd: one local gradient per round, mask-aware aggregation.
+  - fedavg: `local_steps` of compressed-space SGD per round (weights are
+    re-compressed after every local step — the device genuinely trains the
+    compressed model, the paper's §3.1 requirement), then mask-aware
+    aggregation of parameter DELTAS.
+
+Beyond-paper options (flagged, off by default): gradient-upload
+quantization with per-client error feedback (residual carried locally).
+
+The datacenter-scale counterpart (tiers scanned inside one pjit program) is
+core.steps; this module is client-granular for FL research at MLP/100M
+scale, the paper's own regime.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import hetero_aggregate
+from repro.core.compression import CompressionPlan, compress_params
+from repro.core.compression.quantization import fake_quant_ste
+from repro.core.heterogeneity import PROFILES, round_time
+from repro.numerics import FORMATS
+
+
+@dataclass
+class Client:
+    id: int
+    plan: CompressionPlan
+    data: dict                      # {"x": ..., "y": ...} or {"tokens": ...}
+    profile_name: str = "mid"
+    ef_buffer: Any = None           # error-feedback residual (beyond-paper)
+
+
+@functools.lru_cache(maxsize=64)
+def _client_grad_fn(loss_fn: Callable, plan: CompressionPlan):
+    """Gradient of the loss of the plan-compressed model wrt global params
+    (straight-through). Cached per (loss_fn, plan) — plans are hashable."""
+    def f(params, batch):
+        def loss_of(p):
+            cp, masks = compress_params(p, plan)
+            return loss_fn(cp, batch), masks
+        (loss, masks), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
+        return loss, grads, masks
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=64)
+def _client_local_train_fn(loss_fn: Callable, plan: CompressionPlan,
+                           local_steps: int, lr: float):
+    """FedAvg local training IN COMPRESSED SPACE: w <- C(w - lr·g)."""
+    def f(params, batch):
+        cp0, masks = compress_params(params, plan)
+
+        def step(w, _):
+            loss, g = jax.value_and_grad(lambda p: loss_fn(p, batch))(w)
+            w = jax.tree.map(lambda w, g: w - lr * g, w, g)
+            w = compress_params(w, plan)[0]
+            return w, loss
+
+        w, losses = jax.lax.scan(step, cp0, None, length=local_steps)
+        delta = jax.tree.map(lambda a, b: a - b, w, cp0)
+        return losses[-1], delta, masks
+    return jax.jit(f)
+
+
+def _maybe_quantize_upload(grads, fmt: str | None, ef_buffer):
+    """Gradient-upload quantization + error feedback. Returns
+    (uploaded_grads, new_ef_buffer, bits_per_value)."""
+    if fmt is None:
+        return grads, ef_buffer, 32
+    f = FORMATS[fmt]
+    if ef_buffer is None:
+        ef_buffer = jax.tree.map(jnp.zeros_like, grads)
+    corrected = jax.tree.map(lambda g, e: g + e, grads, ef_buffer)
+    q = jax.tree.map(lambda g: fake_quant_ste(g, f.e_bits, f.m_bits), corrected)
+    new_ef = jax.tree.map(lambda c, q: c - q, corrected, q)
+    return q, new_ef, f.bits
+
+
+@dataclass
+class FLServer:
+    """Holds the global model and runs federated rounds."""
+    model: Any                      # namespace with loss_fn
+    optimizer: Any
+    clients: list[Client]
+    params: Any
+    opt_state: Any = None
+    mode: str = "fedsgd"            # fedsgd | fedavg
+    local_steps: int = 5
+    local_lr: float = 0.1
+    server_lr: float = 1.0          # fedavg delta scale
+    upload_quant: str | None = None # e.g. "fp8_e4m3" (beyond-paper)
+    error_feedback: bool = False
+    step: int = 0
+    history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.opt_state is None:
+            self.opt_state = self.optimizer.init(self.params)
+
+    def round(self, client_batches: list[dict] | None = None) -> dict:
+        """One federated round. client_batches defaults to full local data
+        (the paper's batch gradient descent)."""
+        loss_fn = self.model.loss_fn
+        grads_list, masks_list, weights = [], [], []
+        losses, comm = [], []
+        for c, batch in zip(self.clients,
+                            client_batches or [c.data for c in self.clients]):
+            if self.mode == "fedsgd":
+                loss, g, masks = _client_grad_fn(loss_fn, c.plan)(self.params, batch)
+            else:
+                loss, g, masks = _client_local_train_fn(
+                    loss_fn, c.plan, self.local_steps, self.local_lr)(
+                        self.params, batch)
+            g, new_ef, bits = _maybe_quantize_upload(
+                g, self.upload_quant,
+                c.ef_buffer if self.error_feedback else None)
+            if self.error_feedback:
+                c.ef_buffer = new_ef
+            grads_list.append(g)
+            masks_list.append(masks)
+            weights.append(c.plan.weight)
+            losses.append(float(loss))
+            n_batch = next(iter(batch.values())).shape[0]
+            comm.append(round_time(self.params, c.plan,
+                                   PROFILES[c.profile_name], n_batch,
+                                   self.local_steps if self.mode == "fedavg" else 1))
+
+        agg = hetero_aggregate(grads_list, masks_list, weights)
+        if self.mode == "fedavg":
+            # aggregated delta applied with server lr (no optimizer stats)
+            self.params = jax.tree.map(
+                lambda p, d: p + self.server_lr * d, self.params, agg)
+        else:
+            self.params, self.opt_state = self.optimizer.update(
+                agg, self.opt_state, self.params, step=self.step)
+        self.step += 1
+        rec = {"step": self.step, "loss": sum(losses) / len(losses),
+               "client_losses": losses,
+               "round_wall_time": max(c["T"] for c in comm),   # stragglers
+               "total_upload_bytes": sum(c["payload_bytes"] for c in comm)}
+        self.history.append(rec)
+        return rec

@@ -1,0 +1,74 @@
+"""Device heterogeneity model: tier profiles + the paper's Eq. (1) time
+model  T = T_local + T_upload + T_global + T_download  and the memory model.
+
+The paper measures these on a laptop; here (no WAN, no IoT hardware) they
+are modeled analytically from payload bytes and device specs — DESIGN.md §8
+documents this substitution. Profiles are order-of-magnitude realistic for
+the named device classes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.compression import CompressionPlan, payload_bits
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    flops: float          # sustained FLOP/s for training
+    mem_bytes: float      # usable RAM
+    up_bps: float         # uplink bits/s
+    down_bps: float       # downlink bits/s
+
+
+PROFILES: dict[str, DeviceProfile] = {
+    # server-class IoT hub (small GPU)
+    "hub":      DeviceProfile("hub", 5e12, 16e9, 100e6, 100e6),
+    # Jetson-class edge accelerator
+    "high":     DeviceProfile("high", 5e11, 8e9, 50e6, 50e6),
+    # Raspberry Pi 4-class (the paper's reference device)
+    "mid":      DeviceProfile("mid", 1e10, 8e9, 20e6, 20e6),
+    # Pi Zero-class
+    "low":      DeviceProfile("low", 1e9, 5e8, 5e6, 5e6),
+    # MCU-class
+    "embedded": DeviceProfile("embedded", 1e8, 5e7, 1e6, 1e6),
+}
+
+SERVER_FLOPS = 1e14     # aggregation server
+
+
+def train_flops(n_params: float, tokens_or_samples: float) -> float:
+    """~6·N·D for a training pass (fwd+bwd)."""
+    return 6.0 * n_params * tokens_or_samples
+
+
+def round_time(params, plan: CompressionPlan, profile: DeviceProfile,
+               n_samples: int, local_steps: int = 1,
+               server_flops: float = SERVER_FLOPS) -> dict:
+    """Paper Eq. (1), per round, in seconds. Compression reduces T_local
+    (density·N active params), T_upload (compressed gradient), and
+    T_download (compressed model)."""
+    import jax
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    bits = payload_bits(params, plan)
+    t_local = local_steps * train_flops(n_params * plan.density, n_samples) / profile.flops
+    t_up = bits / profile.up_bps
+    t_global = train_flops(n_params, 1) / server_flops     # aggregation pass
+    t_down = bits / profile.down_bps
+    return {"T_local": t_local, "T_upload": t_up, "T_global": t_global,
+            "T_download": t_down,
+            "T": t_local + t_up + t_global + t_down,
+            "payload_bytes": bits / 8}
+
+
+def memory_overhead(params, plan: CompressionPlan, batch: int,
+                    act_bytes_per_sample: float = 0.0) -> float:
+    """Training memory on-device: compressed weights + grads + activations."""
+    bits = payload_bits(params, plan)
+    return 2 * bits / 8 + batch * act_bytes_per_sample
+
+
+def fits(params, plan: CompressionPlan, profile: DeviceProfile,
+         batch: int = 1) -> bool:
+    return memory_overhead(params, plan, batch) <= profile.mem_bytes

@@ -1,0 +1,68 @@
+"""Synthetic token pipeline for LM training/serving.
+
+Deterministic, seekable, infinite: batch i is a pure function of (seed, i),
+so multi-host data loading needs no coordination beyond the shared seed —
+each host slices its shard of the global batch (the standard TPU input
+pipeline contract). Tokens follow a Zipf-like distribution so MoE routers
+and loss curves see realistic token-frequency skew rather than uniform noise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _zipf_tokens(rng: np.random.Generator, shape, vocab: int, alpha: float = 1.1):
+    # inverse-CDF sampling of a truncated zipf via uniform -> rank
+    u = rng.random(shape)
+    ranks = np.exp(np.log1p(u * (vocab ** (1 - alpha) - 1)) / (1 - alpha))
+    return np.clip(ranks.astype(np.int64), 0, vocab - 1)
+
+
+class TokenStream:
+    """Seekable stream of LM batches: {"tokens": (B, T+1) int32}."""
+
+    def __init__(self, vocab: int, batch: int, seq_len: int, seed: int = 0,
+                 zipf_alpha: float = 1.1):
+        self.vocab, self.batch, self.seq_len = vocab, batch, seq_len
+        self.seed, self.alpha = seed, zipf_alpha
+
+    def batch_at(self, index: int) -> dict:
+        rng = np.random.default_rng((self.seed, index))
+        toks = _zipf_tokens(rng, (self.batch, self.seq_len + 1), self.vocab,
+                            self.alpha)
+        return {"tokens": jnp.asarray(toks, jnp.int32)}
+
+    def __iter__(self):
+        i = 0
+        while True:
+            yield self.batch_at(i)
+            i += 1
+
+
+def make_train_batch(cfg, shape, *, n_tiers: int = 0, seed: int = 0,
+                     index: int = 0) -> dict:
+    """Concrete batch matching launch.input_specs (tiered when n_tiers>0)."""
+    rng = np.random.default_rng((seed, index))
+    b, t = shape.global_batch, shape.seq_len
+
+    def tokens(bb, tt):
+        return jnp.asarray(_zipf_tokens(rng, (bb, tt), cfg.vocab_size), jnp.int32)
+
+    lead = (n_tiers, b // n_tiers) if n_tiers else (b,)
+    batch = {}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((*lead, cfg.encoder_seq, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+        batch["tokens"] = tokens(int(np.prod(lead)), t + 1).reshape(*lead, t + 1)
+    elif cfg.family == "vlm":
+        t_text = t - cfg.num_patches
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((*lead, cfg.num_patches, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+        batch["tokens"] = tokens(int(np.prod(lead)), t_text + 1).reshape(*lead, t_text + 1)
+    else:
+        batch["tokens"] = tokens(int(np.prod(lead)), t + 1).reshape(*lead, t + 1)
+    return batch

@@ -1,0 +1,1 @@
+from repro.kernels.codebook_matmul.ops import codebook_matmul  # noqa: F401

@@ -1,0 +1,31 @@
+"""Public wrapper for codebook_matmul (pads to block multiples; padding
+indices decode through codeword 0 against zero activations, so results are
+unaffected)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.codebook_matmul.kernel import codebook_matmul_raw
+
+_B = 128
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def codebook_matmul(x, idx, codebook, interpret: bool | None = None):
+    """y = x @ codebook[idx]; x: (M, K); idx: (K, N) integer codeword ids."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    m, k = x.shape
+    _, n = idx.shape
+    mp, kp, np_ = (-(-m // _B) * _B, -(-k // _B) * _B, -(-n // _B) * _B)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    ip = jnp.pad(idx, ((0, kp - k), (0, np_ - n)))
+    out = codebook_matmul_raw(xp, ip, codebook, interpret=interpret)
+    return out[:m, :n]

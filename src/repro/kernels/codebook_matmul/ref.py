@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for codebook_matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def codebook_matmul_ref(x: jax.Array, idx: jax.Array,
+                        codebook: jax.Array) -> jax.Array:
+    w = codebook.astype(jnp.float32)[idx.astype(jnp.int32)]
+    return jnp.dot(x.astype(jnp.float32), w).astype(x.dtype)

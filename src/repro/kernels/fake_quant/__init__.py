@@ -1,0 +1,1 @@
+from repro.kernels.fake_quant.ops import fake_quant  # noqa: F401

@@ -1,0 +1,72 @@
+"""Pallas kernel: round f32 values onto the representable set of a
+(1, e_bits, m_bits) float format (RNE, saturating, subnormal grid).
+
+TPU adaptation: no frexp/ldexp in Mosaic — the exponent is read from the
+IEEE bit pattern and all scalings are exact powers of two constructed by
+bit-shifting into the exponent field, so the kernel is bit-identical to the
+pure-jnp oracle (ref.py) for all finite normal inputs. (f32-subnormal
+inputs under e_bits=8 formats flush to the nearest grid point using the
+emin-clamped quantum — only reachable for |x| < 2^-126; documented.)
+
+Tiling: elementwise over (block_m, block_n) VMEM tiles; lane dim 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.numerics.float_formats import FloatFormat
+
+
+def _pow2(k):
+    """Exact 2**k (f32) for int32 k in [-126, 127], via exponent-field bits."""
+    return jax.lax.bitcast_convert_type(
+        ((k + 127) << 23).astype(jnp.int32), jnp.float32)
+
+
+def _fmt_consts(e_bits: int, m_bits: int) -> tuple[int, float]:
+    bias = 2 ** (e_bits - 1) - 1
+    emin = 1 - bias
+    emax = 2 ** e_bits - 1 - bias
+    maxv = float(2.0 ** emax * (2.0 - 2.0 ** (-m_bits)))
+    return emin, maxv
+
+
+def _fake_quant_kernel(x_ref, o_ref, *, e_bits: int, m_bits: int):
+    emin, maxv = _fmt_consts(e_bits, m_bits)
+    x = x_ref[...].astype(jnp.float32)
+    xc = jnp.clip(x, -maxv, maxv)
+    u = jax.lax.bitcast_convert_type(xc, jnp.int32)
+    bexp = jax.lax.shift_right_logical(u, 23) & 0xFF
+    ex = jnp.maximum(bexp - 127, emin)
+    # two-step exact scaling keeps every factor a normal f32 power of two
+    t = (xc * _pow2(-ex)) * float(2.0 ** m_bits)
+    r = jax.lax.round(t, jax.lax.RoundingMethod.TO_NEAREST_EVEN)
+    q = (r * float(2.0 ** (-m_bits))) * _pow2(ex)
+    o_ref[...] = q.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("e_bits", "m_bits", "block",
+                                             "interpret"))
+def fake_quant_2d(x: jax.Array, *, e_bits: int, m_bits: int,
+                  block: tuple[int, int] = (256, 512),
+                  interpret: bool = False) -> jax.Array:
+    """x: (M, N) f32, M % block[0] == 0, N % block[1] == 0."""
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_fake_quant_kernel, e_bits=e_bits, m_bits=m_bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def format_of(fmt: FloatFormat):
+    return dict(e_bits=fmt.e_bits, m_bits=fmt.m_bits)

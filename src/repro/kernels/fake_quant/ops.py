@@ -1,0 +1,57 @@
+"""Public wrapper: arbitrary-shape fake quantization through the Pallas
+kernel (pads/reshapes to 2-D tiles), with clip-aware STE, falling back to
+interpret mode off-TPU so CPU tests execute the same kernel body."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fake_quant.kernel import fake_quant_2d, _fmt_consts
+
+_LANES = 128
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_2d(x):
+    n = x.size
+    cols = _LANES * 4
+    rows = max(1, -(-n // cols))
+    pad = rows * cols - n
+    x2 = jnp.pad(x.reshape(-1), (0, pad)).reshape(rows, cols)
+    return x2, pad
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def fake_quant(x, e_bits: int, m_bits: int, interpret: bool | None = None):
+    """Round x onto the (1, e_bits, m_bits) float grid (any shape/dtype),
+    STE backward. Static format — the deployed-device path; the traced-
+    format path (tier scanning) uses repro.core.compression.quantization."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    x2, pad = _to_2d(x.astype(jnp.float32))
+    # row-block must divide rows: use single-row blocks when ragged
+    bm = 256 if x2.shape[0] % 256 == 0 else 1
+    q = fake_quant_2d(x2, e_bits=e_bits, m_bits=m_bits,
+                      block=(bm, x2.shape[1]), interpret=interpret)
+    q = q.reshape(-1)
+    if pad:
+        q = q[:-pad]
+    return q.reshape(x.shape).astype(x.dtype)
+
+
+def _fwd(x, e_bits, m_bits, interpret):
+    _, maxv = _fmt_consts(e_bits, m_bits)
+    return (fake_quant(x, e_bits, m_bits, interpret),
+            jnp.abs(x) <= maxv)
+
+
+def _bwd(e_bits, m_bits, interpret, in_range, g):
+    return (jnp.where(in_range, g, 0).astype(g.dtype),)
+
+
+fake_quant.defvjp(_fwd, _bwd)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fake_quant kernel: the numerics module's
+(e,m) rounding (bit-validated against hardware bf16/fp16 casts)."""
+from __future__ import annotations
+
+import jax
+
+from repro.numerics import quantize_em
+
+
+def fake_quant_ref(x: jax.Array, e_bits: int, m_bits: int) -> jax.Array:
+    return quantize_em(x, e_bits, m_bits)

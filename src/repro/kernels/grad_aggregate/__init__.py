@@ -1,0 +1,1 @@
+from repro.kernels.grad_aggregate.ops import grad_aggregate  # noqa: F401

@@ -1,0 +1,50 @@
+"""Pallas kernel: fused mask-aware heterogeneous gradient aggregation —
+
+    out[i] = sum_t w[t]*m[t,i]*g[t,i] / max(sum_t w[t]*m[t,i], eps)
+
+This is the server-side inner loop of the paper's architecture. Fusing the
+numerator, denominator and divide into one VMEM pass reads g and m exactly
+once from HBM (vs. 3 passes for the naive num/den/divide composition) —
+the aggregation is strictly memory-bound, so passes == time.
+
+Tiling: grid over the flattened parameter axis; each step loads an
+(n_tiers, bn) tile of g and m (tier count is small and static) and the
+(n_tiers, 1) weight column, writes a (1, bn) output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(g_ref, m_ref, w_ref, o_ref, *, eps: float):
+    g = g_ref[...].astype(jnp.float32)          # (T, bn)
+    m = m_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # (T, 1)
+    num = jnp.sum(w * m * g, axis=0)
+    den = jnp.sum(w * m, axis=0)
+    o_ref[...] = (num / jnp.maximum(den, eps))[None, :].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "eps", "interpret"))
+def grad_aggregate_raw(g: jax.Array, m: jax.Array, w: jax.Array, *,
+                       block: int = 1024, eps: float = 1e-8,
+                       interpret: bool = False) -> jax.Array:
+    """g, m: (T, N); w: (T, 1). N % block == 0. Returns (1, N)."""
+    t, n = g.shape
+    bn = min(block, n)
+    return pl.pallas_call(
+        functools.partial(_agg_kernel, eps=eps),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((t, bn), lambda i: (0, i)),
+            pl.BlockSpec((t, bn), lambda i: (0, i)),
+            pl.BlockSpec((t, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), g.dtype),
+        interpret=interpret,
+    )(g, m, w)

@@ -1,0 +1,40 @@
+"""Public wrapper: aggregate a stack of per-tier gradient pytrees (or flat
+arrays) through the fused Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grad_aggregate.kernel import grad_aggregate_raw
+
+_B = 1024
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def grad_aggregate(g, m, w, eps: float = 1e-8,
+                   interpret: bool | None = None):
+    """g, m: (T, ...) stacked tier gradients/masks; w: (T,). Returns (...)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    import math
+    t = g.shape[0]
+    shape = g.shape[1:]
+    n = math.prod(shape) if shape else 1
+    g2 = g.reshape(t, n)
+    m2 = jnp.broadcast_to(m.reshape(t, -1), (t, n)) if m.size != g.size \
+        else m.reshape(t, n)
+    pad = (-n) % _B
+    if pad:
+        g2 = jnp.pad(g2, ((0, 0), (0, pad)))
+        m2 = jnp.pad(m2, ((0, 0), (0, pad)))
+    out = grad_aggregate_raw(g2, m2, w.reshape(t, 1), eps=eps,
+                             interpret=interpret)[0]
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)

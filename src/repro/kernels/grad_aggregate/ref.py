@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for grad_aggregate (mirrors core.aggregation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grad_aggregate_ref(g: jax.Array, m: jax.Array, w: jax.Array,
+                       eps: float = 1e-8) -> jax.Array:
+    """g, m: (T, N); w: (T,) or (T, 1). Returns (N,)."""
+    w = w.reshape(-1, 1).astype(jnp.float32)
+    num = jnp.sum(w * m.astype(jnp.float32) * g.astype(jnp.float32), axis=0)
+    den = jnp.sum(w * m.astype(jnp.float32), axis=0)
+    return (num / jnp.maximum(den, eps)).astype(g.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.masked_matmul.ops import masked_matmul  # noqa: F401

@@ -1,0 +1,60 @@
+"""Public wrapper: pads (M, K) @ (K, N) to block multiples, runs the Pallas
+kernel, differentiable via custom_vjp (backward reuses the same kernel with
+transposed operands — the pruned-model backward pass the paper's platform
+needs for local training)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_matmul.kernel import masked_matmul_raw
+
+_B = 128
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a, rows, cols):
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+def _run(x, w, mask, interpret):
+    m, k = x.shape
+    _, n = w.shape
+    mp = -(-m // _B) * _B
+    kp = -(-k // _B) * _B
+    np_ = -(-n // _B) * _B
+    out = masked_matmul_raw(_pad_to(x, mp, kp), _pad_to(w, kp, np_),
+                            _pad_to(mask, kp, np_), interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def masked_matmul(x, w, mask, interpret: bool | None = None):
+    """y = x @ (w * mask); x: (M, K), w/mask: (K, N)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _run(x, w, mask, interpret)
+
+
+def _fwd(x, w, mask, interpret):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _run(x, w, mask, interpret), (x, w, mask)
+
+
+def _bwd(interpret, res, g):
+    if interpret is None:
+        interpret = _auto_interpret()
+    x, w, mask = res
+    # dx = g @ (w*mask)^T ; dw = (x^T @ g) * mask ; dmask not needed (stop-grad)
+    dx = _run(g, jnp.transpose(w), jnp.transpose(mask), interpret)
+    dw = _run(jnp.transpose(x), g, jnp.ones_like(g), interpret) * mask
+    return dx, dw, None
+
+
+masked_matmul.defvjp(_fwd, _bwd)

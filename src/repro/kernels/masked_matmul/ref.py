@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for masked_matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32),
+                   (w * mask).astype(jnp.float32)).astype(x.dtype)

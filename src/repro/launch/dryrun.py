@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+on the production meshes, record memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+      --shape train_4k --mesh single
+
+Outputs one JSON per (arch, shape, mesh) under experiments/dryrun/.
+This is the proof that the distribution config is coherent: a sharding
+mismatch, compile-time OOM, or unsupported collective fails the run.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.analysis import analyze_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import setup_for
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+                "u64": 8, "c64": 8, "c128": 16}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$")
+_COLL = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[0-9,]*\][^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE = re.compile(r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^}]*?"n":"(\d+)"')
+_BRANCH = re.compile(r"(?:branches=\{([^}]*)\}|"
+                     r"true_computation=%?([\w.\-]+),\s*false_computation=%?([\w.\-]+))")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        nb = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nb *= int(d)
+        total += nb
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-aware collective accounting from post-opt HLO.
+
+    XLA counts a while body once in the text, but annotates
+    backend_config known_trip_count — so we build the computation call
+    graph (while body/cond edges x trip count, conditional branches x 1)
+    and multiply each computation's collective result bytes by its total
+    execution multiplicity. Bytes are per-device result-shape bytes.
+    """
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    # per-computation collectives + child edges
+    coll: dict[str, list[tuple[str, int, int]]] = {}   # comp -> [(op, bytes, 1)]
+    edges: dict[str, list[tuple[str, int]]] = {}
+    for name, lines in comps.items():
+        coll[name] = []
+        edges[name] = []
+        for ln in lines:
+            cm = _COLL.search(ln)
+            if cm and not cm.group(3) == "-done":
+                coll[name].append((cm.group(2), _shape_bytes(cm.group(1)), 1))
+            wm = _WHILE.search(ln)
+            if wm:
+                tm = _TRIP.search(ln)
+                trip = int(tm.group(1)) if tm else 1
+                edges[name].append((wm.group(2), trip))   # body x trip
+                edges[name].append((wm.group(1), trip))   # cond x trip
+            bm = _BRANCH.search(ln)
+            if bm:
+                names = ([s.strip().lstrip("%") for s in bm.group(1).split(",")]
+                         if bm.group(1) else [bm.group(2), bm.group(3)])
+                for b in names:
+                    if b:
+                        edges[name].append((b, 1))
+
+    # multiplicities via DFS from entry
+    mult: dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0) + m
+        for child, factor in edges.get(name, []):
+            visit(child, m * factor)
+
+    if entry:
+        visit(entry, 1)
+
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for name, items in coll.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for op, nb, _ in items:
+            out[op] = out.get(op, 0.0) + nb * m
+            counts[op] = counts.get(op, 0) + m
+    return {"bytes_by_op": out, "count_by_op": counts,
+            "total_bytes": sum(out.values())}
+
+
+def param_counts(params) -> dict:
+    total = sum(x.size for x in jax.tree.leaves(params))
+    return {"total": int(total)}
+
+
+def active_params(cfg, params_tree) -> int:
+    """MoE-aware active parameter count (experts scaled by top-k/E)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        p = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in path)
+        n = leaf.size
+        if cfg.is_moe and "we_" in p:
+            n = int(n * cfg.experts_per_token / cfg.num_experts)
+        total += n
+    return int(total)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            setup_kw: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "mode": shape.mode, "status": "error"}
+    t0 = time.time()
+    try:
+        step, args, in_sh, out_sh = setup_for(cfg, shape, mesh,
+                                              **(setup_kw or {}))
+        with mesh:
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        # jaxpr-level accounting (scan-aware; see launch/analysis.py)
+        jx = analyze_step(step, *args)
+
+        # state/params live bytes per device (arguments)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory={k: int(getattr(mem, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)},
+            flops=jx["flops"],                       # global, scan-aware
+            traffic_bytes=jx["traffic_bytes"],       # global, estimate
+            xla_flops_raw=float(cost.get("flops", -1.0)),   # undercounts scans
+            xla_bytes_raw=float(cost.get("bytes accessed", -1.0)),
+            collectives=coll,
+            params=active_and_total(cfg),
+            tokens_per_step=tokens_per_step(cfg, shape),
+        )
+    except Exception as e:  # noqa: BLE001 — record and keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def active_and_total(cfg) -> dict:
+    from repro.models import get_model
+    params = jax.eval_shape(get_model(cfg).init, jax.random.PRNGKey(0))
+    return {"total": int(sum(x.size for x in jax.tree.leaves(params))),
+            "active": active_params(cfg, params)}
+
+
+def tokens_per_step(cfg, shape) -> int:
+    if shape.mode == "decode":
+        return shape.global_batch
+    return shape.global_batch * shape.seq_len
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for sh in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                fn = os.path.join(args.out, f"{arch}__{sh}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(fn):
+                    with open(fn) as f:
+                        prev = json.load(f)
+                    if prev.get("status") == "ok":
+                        print(f"SKIP {arch} {sh} {mesh_name}")
+                        continue
+                r = run_one(arch, sh, mp, args.out)
+                flag = "OK " if r["status"] == "ok" else "ERR"
+                print(f"{flag} {arch:24s} {sh:12s} {mesh_name:8s} "
+                      f"wall={r['wall_s']}s "
+                      + (r.get("error", "")[:120] if flag == "ERR" else
+                         f"flops/dev={r['flops']:.3g} "
+                         f"coll={r['collectives']['total_bytes']:.3g}B"),
+                      flush=True)
+                results.append(r)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    print(f"\n{n_ok}/{len(results)} dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

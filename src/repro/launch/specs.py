@@ -1,0 +1,196 @@
+"""Dry-run wiring: ShapeDtypeStruct stand-ins for every model input plus
+NamedShardings, per (architecture x input-shape x mesh).
+
+No device memory is ever allocated here — states come from jax.eval_shape
+and inputs are ShapeDtypeStructs, so full-scale (34B-param) configs lower
+and compile on a laptop-class host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import TrainState, make_hetero_train_step, make_serve_step, \
+    make_prefill_step
+from repro.core.compression import default_tier_plans
+from repro.launch.mesh import batch_axes, num_batch_shards
+from repro.models import get_model
+from repro.models.sharding import (cache_spec_tree, make_activation_rules,
+                                   named, param_spec_tree, set_rules)
+
+N_TIERS = 4
+
+
+def window_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Sub-quadratic fallback: the long_500k decode shape uses sliding-window
+    attention for every arch that has a growing KV cache (SSMs keep their
+    native constant-size state). See DESIGN.md long_500k policy."""
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def cache_len_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    w = window_for(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+def _batch_spec(mesh, b: int):
+    ax = batch_axes(mesh)
+    return ax if (ax and b % num_batch_shards(mesh) == 0) else None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_structs(cfg: ModelConfig, shape: ShapeConfig, lead: tuple[int, ...],
+                   *, labels: bool) -> dict:
+    """Training/prefill batch ShapeDtypeStructs with `lead` leading dims."""
+    t = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    extra = 1 if labels else 0
+    batch = {}
+    if cfg.family == "audio":
+        batch["frames"] = _sds((*lead, cfg.encoder_seq, cfg.d_model), dt)
+        batch["tokens"] = _sds((*lead, t + extra), jnp.int32)
+    elif cfg.family == "vlm":
+        batch["patches"] = _sds((*lead, cfg.num_patches, cfg.d_model), dt)
+        batch["tokens"] = _sds((*lead, t - cfg.num_patches + extra), jnp.int32)
+    else:
+        batch["tokens"] = _sds((*lead, t + extra), jnp.int32)
+    return batch
+
+
+def _batch_shardings(batch, mesh, bspec, tiered: bool):
+    def spec(leaf):
+        nd = len(leaf.shape)
+        lead = (None, bspec) if tiered else (bspec,)
+        return NamedSharding(mesh, P(*lead, *(None,) * (nd - len(lead))))
+    return jax.tree.map(spec, batch)
+
+
+def _msize(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _install_rules(mesh, b: int, cfg, shape=None):
+    bspec = _batch_spec(mesh, b)
+    if not bspec:
+        set_rules({})
+        return
+    ms = _msize(mesh)
+    # sequence parallelism was tried and REFUTED for this codebase
+    # (EXPERIMENTS.md §Perf, qwen2.5 iteration 2): chunked attention's
+    # dynamic q-slices over a T-sharded residual made GSPMD re-gather
+    # activations per chunk (collective bytes 16.3 s -> 88.7 s). Kept off.
+    seq_shard = False
+    set_rules(make_activation_rules(
+        mesh, bspec,
+        vocab_ok=cfg.vocab_size % ms == 0,
+        experts_ok=cfg.num_experts % ms == 0 if cfg.is_moe else True,
+        seq_shard=seq_shard))
+
+
+def _deployed_params(model, cfg):
+    """ShapeDtypeStructs of a DEPLOYED (compressed) model: >=2-D weights
+    stored in the compute dtype (the paper's devices hold the compressed
+    model, not the f32 master copy) — halves serving HBM and weight
+    traffic vs f32 stand-ins."""
+    import jax as _jax
+    from repro.core.compression.apply import compressible
+    params = _jax.eval_shape(model.init, _jax.random.PRNGKey(0))
+    dt = jnp.dtype(cfg.dtype)
+
+    def cast(path, leaf):
+        if compressible(path, leaf):
+            return jax.ShapeDtypeStruct(leaf.shape, dt)
+        return leaf
+
+    return _jax.tree_util.tree_map_with_path(cast, params)
+
+
+def train_setup(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                n_tiers: int = N_TIERS):
+    """Returns (step_fn, args, in_shardings, out_shardings) for the tiered
+    federated train step."""
+    assert shape.mode == "train"
+    model = get_model(cfg)
+    opt = optim.adamw(optim.warmup_cosine(3e-4, 100, 10_000))
+    ng = num_batch_shards(mesh)
+    _install_rules(mesh, shape.global_batch // n_tiers, cfg, shape)
+
+    state = jax.eval_shape(
+        lambda k: TrainState.create(model, opt, k), jax.random.PRNGKey(0))
+    per_tier = shape.global_batch // n_tiers
+    batch = _batch_structs(cfg, shape, (n_tiers, per_tier), labels=True)
+
+    # FSDP: the train state (params + Adam moments + accumulators) shards
+    # over the data axes too — without it 30B+ states exceed v5e HBM
+    # (llava-next: 26 GB/chip of arguments model-sharded only; 1.6 GB with
+    # FSDP). GSPMD re-gathers weights per layer inside the scan.
+    fsdp = (batch_axes(mesh), num_batch_shards(mesh))
+    state_sh = named(mesh, param_spec_tree(state, _msize(mesh), fsdp))
+    step = make_hetero_train_step(model, opt, default_tier_plans(n_tiers),
+                                  num_groups=ng,
+                                  acc_shardings=state_sh["params"])
+    bspec = _batch_spec(mesh, per_tier)
+    batch_sh = _batch_shardings(batch, mesh, bspec, tiered=True)
+    out_sh = (state_sh, {"loss": NamedSharding(mesh, P())})
+    return step, (state, batch), (state_sh, batch_sh), out_sh
+
+
+def prefill_setup(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    assert shape.mode == "prefill"
+    model = get_model(cfg)
+    ng = num_batch_shards(mesh)
+    step = make_prefill_step(model, window=window_for(cfg, shape),
+                             num_groups=ng)
+    _install_rules(mesh, shape.global_batch, cfg, shape)
+
+    batch = _batch_structs(cfg, shape, (shape.global_batch,), labels=False)
+    params = _deployed_params(model, cfg)
+    params_sh = named(mesh, param_spec_tree(params, _msize(mesh)))
+    bspec = _batch_spec(mesh, shape.global_batch)
+    batch_sh = _batch_shardings(batch, mesh, bspec, tiered=False)
+
+    _, cache = jax.eval_shape(lambda p, b: step(p, b), params, batch)
+    cache_sh = named(mesh, cache_spec_tree(cache, bspec, _msize(mesh)))
+    out_sh = (NamedSharding(mesh, P()), cache_sh)
+    return step, (params, batch), (params_sh, batch_sh), out_sh
+
+
+def decode_setup(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    assert shape.mode == "decode"
+    model = get_model(cfg)
+    ng = num_batch_shards(mesh)
+    w = window_for(cfg, shape)
+    step = make_serve_step(model, window=w, num_groups=ng)
+    _install_rules(mesh, shape.global_batch, cfg, shape)
+
+    b = shape.global_batch
+    params = _deployed_params(model, cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(b, cache_len_for(cfg, shape)))
+    tokens = _sds((b, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+
+    params_sh = named(mesh, param_spec_tree(params, _msize(mesh)))
+    bspec = _batch_spec(mesh, b)
+    cache_sh = named(mesh, cache_spec_tree(cache, bspec, _msize(mesh)))
+    tok_sh = NamedSharding(mesh, P(bspec, None))
+    pos_sh = NamedSharding(mesh, P())
+    out_sh = (NamedSharding(mesh, P()), cache_sh)
+    return step, (params, cache, tokens, pos), \
+        (params_sh, cache_sh, tok_sh, pos_sh), out_sh
+
+
+def setup_for(cfg: ModelConfig, shape: ShapeConfig, mesh, **kw):
+    if shape.mode == "train":
+        return train_setup(cfg, shape, mesh, **kw)
+    if shape.mode == "prefill":
+        return prefill_setup(cfg, shape, mesh)
+    return decode_setup(cfg, shape, mesh)

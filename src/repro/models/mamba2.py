@@ -1,0 +1,169 @@
+"""Mamba2 (SSD) block: chunked state-space-dual training form (matmul-heavy,
+TPU/MXU-friendly) + O(1) recurrent decode step.
+
+Simplifications vs. the reference CUDA implementation (documented in
+DESIGN.md): n_groups = 1 (B/C shared across heads), no sequence-parallel
+conv halo (conv runs full-sequence under pjit; XLA shards the batch dim).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense, init_dense, rms_norm
+
+CHUNK = 256
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_headdim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, nheads, conv_dim
+
+
+def init_mamba(key, cfg) -> dict:
+    d_in, nheads, conv_dim = dims(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * cfg.ssm_state + nheads   # z, x, B, C, dt
+    return {
+        "in_proj": init_dense(ks[0], cfg.d_model, proj_out),
+        "conv_w": jax.random.normal(ks[1], (conv_dim, cfg.conv_width), jnp.float32)
+                  * (1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, nheads)).astype(jnp.float32)),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_dense(ks[4], d_in, cfg.d_model,
+                               scale=1.0 / math.sqrt(d_in * 2 * cfg.num_layers)),
+    }
+
+
+def _split_proj(p, u, cfg):
+    d_in, nheads, _ = dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = dense(p["in_proj"], u)
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(p, xbc, cfg):
+    """Depthwise causal conv over (B, T, C)."""
+    w = p["conv_w"].astype(xbc.dtype)                  # (C, W)
+    c = xbc.shape[-1]
+    out = lax.conv_general_dilated(
+        xbc, w.T[:, None, :],                          # (W, 1, C)
+        window_strides=(1,), padding=[(cfg.conv_width - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=c)
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_scan(x, bmat, cmat, dt, a, cfg, init_state=None):
+    """Chunked SSD. x: (B,T,H,P); bmat/cmat: (B,T,N); dt: (B,T,H) (post-
+    softplus); a: (H,) negative. Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    q = CHUNK if t % CHUNK == 0 else t
+    nc = t // q
+    xc = x.reshape(b, nc, q, h, p)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h)
+    da = dtc * a[None, None, None, :]                  # (B,nc,Q,H) log-decay (<0)
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def chunk(state, xs):
+        xq, bq, cq, dtq, daq = xs                      # (B,Q,...) for one chunk
+        cum = jnp.cumsum(daq, axis=1)                  # (B,Q,H)
+        # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i-cum_j) dt_j x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H) i,j
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        seg = jnp.where(tri[None, :, :, None], seg, -jnp.inf)
+        lmat = jnp.exp(seg)                            # (B,Q,Q,H)
+        scores = jnp.einsum("bin,bjn->bij", cq.astype(jnp.float32),
+                            bq.astype(jnp.float32))    # (B,Q,Q)
+        m = scores[..., None] * lmat * dtq[:, None, :, :]      # (B,Qi,Qj,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xq.astype(jnp.float32))
+        # inter-chunk: y_i += exp(cum_i) C_i . state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cq.astype(jnp.float32), state) \
+            * jnp.exp(cum)[..., None]                  # (B,Q,H,1)
+        # state update: S' = exp(cum_last) S + sum_j exp(cum_last-cum_j) dt_j x_j B_j^T
+        wj = jnp.exp(cum[:, -1:, :] - cum) * dtq       # (B,Q,H)
+        new_state = jnp.exp(cum[:, -1])[:, :, None, None] * state \
+            + jnp.einsum("bqhp,bqn,bqh->bhpn", xq.astype(jnp.float32),
+                         bq.astype(jnp.float32), wj)
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0),
+          jnp.moveaxis(dtc, 1, 0), jnp.moveaxis(da, 1, 0))
+    state, yc = lax.scan(chunk, s0, xs)
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, t, h, p)
+    return y, state
+
+
+def mamba_forward(p: dict, u: jax.Array, cfg, state=None):
+    """u: (B, T, D) -> (out (B, T, D), decode-ready state dict)."""
+    b, t, _ = u.shape
+    d_in, nheads, conv_dim = dims(cfg)
+    z, x, bmat, cmat, dt = _split_proj(p, u, cfg)
+    xbc_raw = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc = _causal_conv(p, xbc_raw, cfg)
+    x, bmat, cmat = jnp.split(xbc, [d_in, d_in + cfg.ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = x.reshape(b, t, nheads, cfg.ssm_headdim)
+    y, fstate = _ssd_scan(xh, bmat, cmat, dt, a, cfg,
+                          None if state is None else state["ssm"])
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, t, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    # conv state = last W-1 raw (pre-conv) inputs, left-padded if t < W-1
+    w1 = cfg.conv_width - 1
+    tail = xbc_raw[:, -w1:, :] if t >= w1 else jnp.pad(
+        xbc_raw, ((0, 0), (w1 - t, 0), (0, 0)))
+    return dense(p["out_proj"], y), {"conv": tail.astype(jnp.dtype(cfg.dtype)),
+                                     "ssm": fstate}
+
+
+def init_mamba_state(cfg, batch: int):
+    d_in, nheads, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(p: dict, u: jax.Array, state: dict, cfg):
+    """Single-step recurrence. u: (B, 1, D). Returns (out (B,1,D), state)."""
+    b = u.shape[0]
+    d_in, nheads, conv_dim = dims(cfg)
+    z, x, bmat, cmat, dt = _split_proj(p, u, cfg)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)    # (B,1,C)
+    # rolling conv state
+    window = jnp.concatenate([state["conv"], xbc], axis=1)      # (B,W,C)
+    w = p["conv_w"].astype(xbc.dtype)                  # (C, W)
+    conv_out = jnp.einsum("bwc,cw->bc", window, w) + p["conv_b"].astype(xbc.dtype)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :]
+    x, bmat, cmat = jnp.split(xbc1, [d_in, d_in + cfg.ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]   # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None, :])                   # (B,H)
+    xh = x[:, 0].reshape(b, nheads, cfg.ssm_headdim).astype(jnp.float32)
+    bn = bmat[:, 0].astype(jnp.float32)                # (B,N)
+    cn = cmat[:, 0].astype(jnp.float32)
+    new_ssm = decay[:, :, None, None] * state["ssm"] \
+        + jnp.einsum("bhp,bn,bh->bhpn", xh, bn, dt)
+    y = jnp.einsum("bn,bhpn->bhp", cn, new_ssm)        # (B,H,P)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return dense(p["out_proj"], y), {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,117 @@
+"""Top-k MoE layer with capacity-based, einsum-dispatch expert parallelism.
+
+§Perf hillclimb #1 (see EXPERIMENTS.md): the dispatch was originally a
+vmapped scatter into an (E, C, D) buffer. GSPMD cannot partition batched
+scatter/gather against expert-sharded operands — it falls back to
+"involuntary full rematerialization" (replicate + re-partition) of the
+full capacity buffer in BOTH fwd and bwd of every layer, ~28 TB/step of
+all-reduce/all-gather on qwen3-moe train_4k. The classic Switch-style
+ONE-HOT EINSUM dispatch is matmul-only, which GSPMD partitions cleanly:
+
+  tokens are split into groups of <= GROUP (512) tokens (groups sharded
+  over the data axes, like per-device micro-groups in MaxText);
+  dispatch (g,n,e,c) one-hot masks are built per top-k choice and summed
+  (never materializing the (n,k,e,c) product);
+  buf = einsum(mask, x); experts = local E-sharded matmuls;
+  y = einsum(out_buf, gate-weighted mask).
+
+This adds ~2*N*(E*C)*D dispatch/combine FLOPs (~+50% of expert FLOPs at
+top-8, cf 1.25) but removes the pathological collectives — compute is
+cheap, ICI is not. Small groups keep the one-hot tensors tiny ((g,n,e,c)
+~10 MB/device) at a small capacity-variance cost, the standard tradeoff.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import init_dense
+from repro.models.sharding import hint
+
+GROUP = 512          # max tokens per dispatch group
+
+
+def init_moe(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    scale_in = 1.0 / jnp.sqrt(d)
+    scale_out = 1.0 / jnp.sqrt(f * 2 * cfg.num_layers)
+    return {
+        "router": init_dense(ks[0], d, e, scale=0.02),
+        "we_g": jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale_in,
+        "we_i": jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale_in,
+        "we_o": jax.random.normal(ks[3], (e, f, d), jnp.float32) * scale_out,
+    }
+
+
+def capacity(tokens_per_group: int, cfg) -> int:
+    c = int(round(tokens_per_group * cfg.experts_per_token
+                  * cfg.capacity_factor / cfg.num_experts))
+    return max(min(c, tokens_per_group), 1)
+
+
+def _num_groups(n: int, num_groups: int) -> int:
+    """Data-shard groups split further into <=GROUP-token subgroups."""
+    g = num_groups if n % num_groups == 0 else 1
+    per = n // g
+    sub = max(1, per // GROUP)
+    while per % sub:
+        sub -= 1
+    return g * sub
+
+
+def moe_apply(p: dict, x: jax.Array, cfg, num_groups: int = 1):
+    """x: (B, T, D) -> (out (B, T, D), aux_loss scalar f32)."""
+    b, t, d = x.shape
+    n = b * t
+    e, k = cfg.num_experts, cfg.experts_per_token
+    g = _num_groups(n, num_groups)
+    ng = n // g
+    xg = x.reshape(g, ng, d)
+
+    # --- routing (f32; router excluded from compression plans) ---
+    logits = jnp.einsum("gnd,de->gne", xg.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    top_vals, top_idx = lax.top_k(logits, k)            # (g, ng, k)
+    gates = jax.nn.softmax(top_vals, axis=-1)
+
+    # --- load-balance aux (Switch-style, over all top-k assignments) ---
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=(0, 1))                   # (e,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_idx, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / k
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce)
+
+    cap = capacity(ng, cfg)
+
+    # --- positions within each expert's capacity (priority: token-major) ---
+    ohf = jax.nn.one_hot(top_idx.reshape(g, ng * k), e,
+                         dtype=jnp.float32)             # (g, ng*k, e)
+    pos = jnp.cumsum(ohf, axis=1) - 1.0                 # (g, ng*k, e)
+    pie = jnp.sum(pos * ohf, axis=-1)                   # (g, ng*k)
+    keep = (pie < cap).astype(jnp.float32)
+    ohc = jax.nn.one_hot(pie.astype(jnp.int32), cap,
+                         dtype=jnp.float32) * keep[..., None]  # (g, ng*k, c)
+
+    # --- dispatch & combine masks, k summed BEFORE the (e, c) product ---
+    ohe_k = ohf.reshape(g, ng, k, e)
+    ohc_k = ohc.reshape(g, ng, k, cap)
+    dt = jnp.dtype(cfg.dtype)
+    dispatch = jnp.einsum("gnke,gnkc->gnec", ohe_k, ohc_k).astype(dt)
+    combine = jnp.einsum("gnke,gnkc,gnk->gnec", ohe_k, ohc_k,
+                         gates).astype(dt)
+    dispatch = hint(dispatch, "moe_mask")
+    combine = hint(combine, "moe_mask")
+
+    # --- dispatch -> expert matmuls (E on "model") -> combine ---
+    buf = jnp.einsum("gnec,gnd->gecd", dispatch, xg.astype(dt))
+    buf = hint(buf, "moe_buf")
+    hg = jnp.einsum("gecd,edf->gecf", buf, p["we_g"].astype(dt))
+    hi = jnp.einsum("gecd,edf->gecf", buf, p["we_i"].astype(dt))
+    out_buf = jnp.einsum("gecf,efd->gecd", jax.nn.silu(hg) * hi,
+                         p["we_o"].astype(dt))
+    out_buf = hint(out_buf, "moe_buf")
+    y = jnp.einsum("gecd,gnec->gnd", out_buf, combine)
+    return y.reshape(b, t, d).astype(x.dtype), aux

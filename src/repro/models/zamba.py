@@ -1,0 +1,186 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared attention+MLP
+block (parameters shared across applications) applied after every
+``cfg.attn_every`` mamba layers — the Zamba parameter-efficiency trick.
+
+Decode state: per-layer mamba (conv + ssm) states scanned as xs/ys, plus a
+stack of KV caches (one per shared-block application) carried through the
+layer scan and updated via lax.cond + dynamic slice.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.mamba2 import (init_mamba, init_mamba_state, mamba_decode,
+                                 mamba_forward)
+from repro.models.sharding import hint
+
+
+def n_attn_apps(cfg) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 6 + cfg.num_layers)
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": L.init_attn(ks[0], cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp": L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, n_attn_apps(cfg)),
+    }
+
+    def one_layer(k):
+        return {"ln": jnp.ones((cfg.d_model,), jnp.float32),
+                "mamba": init_mamba(k, cfg)}
+
+    return {
+        "embed": L.init_embed(ks[2], cfg.vocab_size, cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.init_dense(ks[3], cfg.d_model, cfg.vocab_size, scale=0.02),
+        "shared": shared,
+        "layers": L.stack_layers(ks[6:6 + cfg.num_layers], one_layer),
+    }
+
+
+def _shared_block(sp, x, cfg, window):
+    h = L.attn_forward(sp["attn"], L.rms_norm(x, sp["ln1"], cfg.norm_eps),
+                       cfg, window=window)
+    x = x + h
+    return x + L.swiglu(sp["mlp"], L.rms_norm(x, sp["ln2"], cfg.norm_eps))
+
+
+def _shared_block_decode(sp, x, cache_a, pos, cfg, window):
+    h, cache_a = L.attn_decode(sp["attn"], L.rms_norm(x, sp["ln1"], cfg.norm_eps),
+                               cache_a, pos, cfg, window=window)
+    x = x + h
+    return x + L.swiglu(sp["mlp"], L.rms_norm(x, sp["ln2"], cfg.norm_eps)), cache_a
+
+
+def forward(params, tokens, cfg, *, window: int = 0, remat: bool = True,
+            num_groups: int = 1):
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    x = hint(x, "act_btd")
+    every = cfg.attn_every
+    shared = params["shared"]
+
+    def body(carry, xs):
+        x, idx = carry
+        lp = xs
+        y, _ = mamba_forward(lp["mamba"], L.rms_norm(x, lp["ln"], cfg.norm_eps), cfg)
+        x = hint(x + y, "act_btd")
+        x = lax.cond((idx + 1) % every == 0,
+                     lambda x: _shared_block(shared, x, cfg, window),
+                     lambda x: x, x)
+        return (x, idx + 1), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, _), _ = lax.scan(body_fn, (x, jnp.int32(0)), params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.dense(params["lm_head"], x.astype(jnp.float32))
+    return hint(logits, "logits"), jnp.float32(0.0)
+
+
+def loss_fn(params, batch, cfg, *, num_groups: int = 1):
+    tokens = batch["tokens"]
+    logits, _ = forward(params, tokens[:, :-1], cfg)
+    return L.cross_entropy(logits, tokens[:, 1:])
+
+
+def prefill(params, tokens, cfg, *, window: int = 0, num_groups: int = 1):
+    """Full-sequence forward filling mamba states + shared-attn KV caches.
+    Returns (last-token logits (B, 1, V), cache)."""
+    b, t = tokens.shape
+    x = hint(L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype)), "act_btd")
+    every = cfg.attn_every
+    shared = params["shared"]
+    apps = n_attn_apps(cfg)
+    kv0 = L.init_kv_cache(b, t, cfg.num_kv_heads, cfg.head_dim, jnp.dtype(cfg.dtype))
+    attn_caches = jax.tree.map(lambda s: jnp.zeros((apps, *s.shape), s.dtype), kv0)
+
+    def shared_prefill(x, caches, app):
+        h_in = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+        q = L.dense(shared["attn"]["wq"], h_in)
+        k = L.dense(shared["attn"]["wk"], h_in)
+        v = L.dense(shared["attn"]["wv"], h_in)
+        pos = jnp.arange(t)
+        q = L.rope(q, pos, cfg.rope_theta)
+        k = L.rope(k, pos, cfg.rope_theta)
+        o = L.chunked_attention(q, k, v, causal=True, window=window)
+        x = x + L.dense(shared["attn"]["wo"], o.reshape(b, t, -1))
+        x = x + L.swiglu(shared["mlp"], L.rms_norm(x, shared["ln2"], cfg.norm_eps))
+        new = {"k": k.astype(caches["k"].dtype), "v": v.astype(caches["v"].dtype),
+               "slot_pos": jnp.arange(t, dtype=jnp.int32)}
+        caches = jax.tree.map(
+            lambda c, u: lax.dynamic_update_index_in_dim(c, u, app, 0), caches, new)
+        return x, caches
+
+    def body(carry, lp):
+        x, idx, caches = carry
+        y, mstate = mamba_forward(lp["mamba"], L.rms_norm(x, lp["ln"], cfg.norm_eps), cfg)
+        x = hint(x + y, "act_btd")
+        x, caches = lax.cond(
+            (idx + 1) % every == 0,
+            lambda args: shared_prefill(args[0], args[1], (idx + 1) // every - 1),
+            lambda args: args, (x, caches))
+        return (x, idx + 1, caches), mstate
+
+    (x, _, attn_caches), mstates = lax.scan(
+        body, (x, jnp.int32(0), attn_caches), params["layers"])
+    x = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = L.dense(params["lm_head"], x.astype(jnp.float32))
+    return logits, {"mamba": mstates, "attn": attn_caches}
+
+
+def init_cache(cfg, batch: int, cache_len: int):
+    apps = n_attn_apps(cfg)
+    ms = init_mamba_state(cfg, batch)
+    kv = L.init_kv_cache(batch, cache_len, cfg.num_kv_heads, cfg.head_dim,
+                         jnp.dtype(cfg.dtype))
+    return {
+        "mamba": jax.tree.map(
+            lambda s: jnp.zeros((cfg.num_layers, *s.shape), s.dtype), ms),
+        "attn": jax.tree.map(
+            lambda s: jnp.zeros((apps, *s.shape), s.dtype), kv),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg, *, window: int = 0,
+                num_groups: int = 1):
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    every = cfg.attn_every
+    shared = params["shared"]
+
+    def body(carry, xs):
+        x, idx, attn_caches = carry
+        lp, mstate = xs
+        y, mstate = mamba_decode_block(lp, x, mstate, cfg)
+
+        def with_attn(args):
+            x, caches = args
+            app = (idx + 1) // every - 1
+            cache_a = jax.tree.map(lambda c: lax.dynamic_index_in_dim(c, app, 0, False), caches)
+            x, cache_a = _shared_block_decode(shared, x, cache_a, pos, cfg, window)
+            caches = jax.tree.map(
+                lambda c, u: lax.dynamic_update_index_in_dim(c, u.astype(c.dtype), app, 0),
+                caches, cache_a)
+            return x, caches
+
+        x, attn_caches = lax.cond((idx + 1) % every == 0, with_attn,
+                                  lambda a: a, (y, attn_caches))
+        return (x, idx + 1, attn_caches), mstate
+
+    def mamba_decode_block(lp, x, mstate, cfg):
+        y, mstate = mamba_decode(lp["mamba"], L.rms_norm(x, lp["ln"], cfg.norm_eps),
+                                 mstate, cfg)
+        return x + y, mstate
+
+    (x, _, attn_caches), mamba_states = lax.scan(
+        body, (x, jnp.int32(0), cache["attn"]),
+        (params["layers"], cache["mamba"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.dense(params["lm_head"], x.astype(jnp.float32))
+    return logits, {"mamba": mamba_states, "attn": attn_caches}

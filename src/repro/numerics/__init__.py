@@ -1,0 +1,2 @@
+from repro.numerics.float_formats import (FORMATS, FloatFormat, max_finite,
+                                          quantize_em)  # noqa: F401

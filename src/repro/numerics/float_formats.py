@@ -1,0 +1,95 @@
+"""Arbitrary-bit-width floating-point simulation (paper §7.1).
+
+The paper plans to "implement various data types by adjusting the number of
+bits for the exponent and the significand ... based on the IEEE standard".
+On TPU there is no arbitrary-width FPU, so we implement the TPU-idiomatic
+equivalent: values are rounded (round-to-nearest-even) onto the EXACT
+representable set of a (1, e, m) format — normals, subnormals, and
+saturation to the max finite value (no inf/nan encodings, fp8-e4m3 style) —
+while storage/accumulation stay f32/bf16. This reproduces the *numerics* of
+low-precision training bit-faithfully; the MXU supplies the arithmetic.
+
+All parameters may be traced (dynamic e/m), which lets a single compiled
+federated step serve many device tiers via lax.scan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FloatFormat:
+    name: str
+    e_bits: int
+    m_bits: int
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.e_bits + self.m_bits
+
+
+FORMATS: dict[str, FloatFormat] = {f.name: f for f in [
+    FloatFormat("fp32", 8, 23),         # passthrough under f32 storage
+    FloatFormat("bf16", 8, 7),
+    FloatFormat("fp16", 5, 10),
+    FloatFormat("fp8_e4m3", 4, 3),
+    FloatFormat("fp8_e5m2", 5, 2),
+    FloatFormat("fp6_e3m2", 3, 2),
+    FloatFormat("fp4_e2m1", 2, 1),
+]}
+
+
+def _ldexp1(e_int):
+    """Exact 2**e (f32) for integer e — jnp.exp2 is NOT bit-exact on CPU."""
+    return jnp.ldexp(jnp.float32(1.0), jnp.asarray(e_int, jnp.int32))
+
+
+def _fmt_consts(e_bits, m_bits):
+    e_bits = jnp.asarray(e_bits, jnp.int32)
+    m_bits = jnp.asarray(m_bits, jnp.int32)
+    bias = _ldexp1(e_bits - 1) - 1.0
+    emin = 1.0 - bias                                   # min normal exponent
+    emax = _ldexp1(e_bits) - 1.0 - bias                 # no inf/nan reserved
+    maxv = _ldexp1(emax.astype(jnp.int32)) * (2.0 - _ldexp1(-m_bits))
+    return emin, maxv
+
+
+def max_finite(e_bits, m_bits):
+    return _fmt_consts(e_bits, m_bits)[1]
+
+
+def quantize_em(x: jax.Array, e_bits, m_bits) -> jax.Array:
+    """Round x (f32) to the representable set of the (1, e, m) float format.
+
+    Round-to-nearest-even; saturating; subnormals flush gradually (exact
+    subnormal grid). e_bits/m_bits may be python ints or traced scalars.
+    """
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    emin, maxv = _fmt_consts(e_bits, m_bits)
+    m_bits_i = jnp.asarray(m_bits, jnp.int32)
+    xc = jnp.clip(x, -maxv, maxv)
+    ax = jnp.abs(xc)
+    # exact exponent via frexp (ax = mant * 2^e2, mant in [0.5, 1)), floored
+    # at emin (=> exact subnormal grid below emin)
+    _, e2 = jnp.frexp(ax)
+    ex = jnp.maximum(e2 - 1, emin.astype(jnp.int32))
+    quantum = jnp.ldexp(jnp.float32(1.0), ex - m_bits_i)   # exact power of 2
+    q = jnp.round(xc / quantum) * quantum               # RNE (jnp.round is RNE)
+    # rounding up may cross a binade boundary (e.g. 1.96 -> 2.0): that result
+    # is exactly representable, so no correction needed.
+    return jnp.where(jnp.isfinite(x), q, x).astype(dt)
+
+
+def quantize_int(x: jax.Array, bits, *, scale=None) -> jax.Array:
+    """Symmetric per-tensor int-k fake quantization."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    qmax = jnp.exp2(jnp.asarray(bits, jnp.float32) - 1.0) - 1.0
+    if scale is None:
+        scale = jnp.max(jnp.abs(x)) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    return (jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale).astype(dt)

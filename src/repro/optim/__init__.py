@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, sgd,
+                                    momentum)  # noqa: F401
+from repro.optim.schedules import (constant, cosine_decay,
+                                   warmup_cosine)  # noqa: F401

@@ -1,0 +1,81 @@
+"""Pure-pytree optimizers (no external deps): SGD, momentum, Adam, AdamW.
+
+Interface (optax-like but self-contained, per the "build every substrate"
+brief):  opt = adamw(lr);  state = opt.init(params);
+         params, state = opt.update(grads, state, params, step=...)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.float32(lr)
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step=0):
+        lr_t = _lr_at(lr, step)
+        return jax.tree.map(lambda p, g: p - lr_t * g, params, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step=0):
+        lr_t = _lr_at(lr, step)
+        m = jax.tree.map(lambda m, g: beta * m + g, state["m"], grads)
+        return (jax.tree.map(lambda p, m: p - lr_t * m, params, m), {"m": m})
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, wd):
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        count = state["count"] + 1
+        lr_t = _lr_at(lr, count if step is None else step)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if wd:
+                u = u + wd * p
+            return p - lr_t * u
+
+        return (jax.tree.map(upd, params, m, v),
+                {"m": m, "v": v, "count": count})
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0)
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay)

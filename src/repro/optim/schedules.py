@@ -1,0 +1,26 @@
+"""Learning-rate schedules as step -> lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def f(step):
+        t = jnp.clip(step / decay_steps, 0.0, 1.0)
+        return jnp.float32(lr * (alpha + (1 - alpha) * 0.5 * (1 + jnp.cos(jnp.pi * t))))
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int,
+                  alpha: float = 0.0):
+    cos = cosine_decay(lr, max(decay_steps - warmup_steps, 1), alpha)
+
+    def f(step):
+        warm = lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, jnp.float32(warm),
+                         cos(step - warmup_steps))
+    return f

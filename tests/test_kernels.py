@@ -1,0 +1,115 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs the
+ref.py pure-jnp oracle (interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (codebook_matmul, fake_quant, grad_aggregate,
+                           masked_matmul)
+from repro.kernels.codebook_matmul.ref import codebook_matmul_ref
+from repro.kernels.fake_quant.ref import fake_quant_ref
+from repro.kernels.grad_aggregate.ref import grad_aggregate_ref
+from repro.kernels.masked_matmul.ref import masked_matmul_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("shape", [(16,), (100, 37), (8, 16, 32), (1, 1),
+                                   (999,), (256, 512)])
+@pytest.mark.parametrize("em", [(4, 3), (5, 2), (8, 7), (5, 10), (2, 1),
+                                (3, 2)])
+def test_fake_quant_sweep(shape, em):
+    x = jax.random.normal(KEY, shape) * 7
+    q = fake_quant(x, *em)
+    r = fake_quant_ref(x, *em)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(r))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fake_quant_dtypes(dtype):
+    x = (jax.random.normal(KEY, (64, 64)) * 3).astype(dtype)
+    q = fake_quant(x, 4, 3)
+    assert q.dtype == dtype
+    r = fake_quant_ref(x.astype(jnp.float32), 4, 3).astype(dtype)
+    np.testing.assert_array_equal(np.asarray(q, np.float32),
+                                  np.asarray(r, np.float32))
+
+
+def test_fake_quant_grad_is_clip_aware_ste():
+    x = jnp.array([0.5, 1e6, -1e6])
+    g = jax.grad(lambda v: fake_quant(v, 4, 3).sum())(x)
+    assert g.tolist() == [1.0, 0.0, 0.0]
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (64, 200, 96),
+                                   (1, 128, 128), (130, 257, 129),
+                                   (256, 384, 512)])
+def test_masked_matmul_sweep(m, k, n):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (m, k))
+    w = jax.random.normal(ks[1], (k, n))
+    mask = (jax.random.uniform(ks[2], (k, n)) > 0.5).astype(jnp.float32)
+    y = masked_matmul(x, w, mask)
+    r = masked_matmul_ref(x, w, mask)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               rtol=1e-4, atol=1e-4 * k ** 0.5)
+
+
+def test_masked_matmul_grads_match_ref():
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (32, 64))
+    w = jax.random.normal(ks[1], (64, 48))
+    mask = (jax.random.uniform(ks[2], (64, 48)) > 0.3).astype(jnp.float32)
+
+    def f(fn):
+        return jax.grad(lambda x, w: (fn(x, w, mask) ** 2).sum(), (0, 1))(x, w)
+
+    (gx, gw), (rx, rw) = f(masked_matmul), f(masked_matmul_ref)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-3,
+                               atol=1e-2)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-3,
+                               atol=1e-2)
+    # gradient respects the mask: pruned entries get zero
+    assert bool(jnp.all(jnp.where(mask == 0, gw == 0, True)))
+
+
+@pytest.mark.parametrize("m,k,n,codes", [(64, 128, 64, 16), (128, 256, 128, 4),
+                                         (32, 100, 60, 256), (1, 128, 128, 2)])
+def test_codebook_matmul_sweep(m, k, n, codes):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (m, k))
+    idx = jax.random.randint(ks[1], (k, n), 0, codes)
+    cb = jnp.sort(jax.random.normal(ks[2], (codes,)))
+    y = codebook_matmul(x, idx, cb)
+    r = codebook_matmul_ref(x, idx, cb)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_codebook_matmul_int8_indices():
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (16, 128))
+    idx = jax.random.randint(ks[1], (128, 64), 0, 16).astype(jnp.int8)
+    cb = jax.random.normal(ks[2], (16,))
+    np.testing.assert_allclose(
+        np.asarray(codebook_matmul(x, idx, cb)),
+        np.asarray(codebook_matmul_ref(x, idx, cb)), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("t,n", [(2, 100), (4, 4096), (8, 1 << 15), (1, 7)])
+def test_grad_aggregate_sweep(t, n):
+    ks = jax.random.split(KEY, 2)
+    g = jax.random.normal(ks[0], (t, n))
+    m = (jax.random.uniform(ks[1], (t, n)) > 0.4).astype(jnp.float32)
+    w = jnp.linspace(0.5, 2.0, t)
+    np.testing.assert_allclose(np.asarray(grad_aggregate(g, m, w)),
+                               np.asarray(grad_aggregate_ref(g, m, w)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_grad_aggregate_all_pruned_is_zero():
+    g = jnp.ones((3, 16))
+    m = jnp.zeros((3, 16))
+    out = grad_aggregate(g, m, jnp.ones((3,)))
+    assert bool(jnp.all(out == 0.0))

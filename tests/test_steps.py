@@ -1,0 +1,101 @@
+"""The datacenter-scale tier-scanned federated step (core.steps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_smoke_config
+from repro.core import TrainState, make_hetero_train_step
+from repro.core.steps import (compress_for_serving, make_fedsgd_train_step,
+                              make_serve_step)
+from repro.core.compression import (CompressionPlan, DEVICE_TIERS,
+                                    default_tier_plans)
+from repro.models import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="granite-3-2b", plans=None, lr=1e-3):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    opt = optim.adamw(lr)
+    state = TrainState.create(model, opt, KEY)
+    plans = plans or default_tier_plans(4)
+    step = jax.jit(make_hetero_train_step(model, opt, plans))
+    return cfg, model, opt, state, step, plans
+
+
+def _batch(cfg, n_tiers, b=2, t=16):
+    return {"tokens": jax.random.randint(KEY, (n_tiers, b, t + 1), 0,
+                                         cfg.vocab_size)}
+
+
+def test_loss_decreases_over_steps():
+    cfg, model, opt, state, step, _ = _setup()
+    batch = _batch(cfg, 4)
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert not any(np.isnan(losses))
+
+
+def test_single_hub_tier_equals_plain_fedsgd_step():
+    """One uncompressed tier must reduce the hetero step to classic FedSGD."""
+    cfg, model, opt, state, _, _ = _setup(plans=[DEVICE_TIERS["hub"]])
+    hetero = jax.jit(make_hetero_train_step(model, opt, [DEVICE_TIERS["hub"]]))
+    plain = jax.jit(make_fedsgd_train_step(model, opt))
+    batch = _batch(cfg, 1)
+    s_h, m_h = hetero(state, batch)
+    s_p, m_p = plain(state, {k: v[0] for k, v in batch.items()})
+    assert abs(float(m_h["loss"]) - float(m_p["loss"])) < 1e-5
+    for a, b in zip(jax.tree.leaves(s_h["params"]),
+                    jax.tree.leaves(s_p["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_compressed_tiers_still_learn():
+    """Aggressively compressed tiers only (the paper's low-end fleet)."""
+    plans = [CompressionPlan("l1", density=0.5, quant="fp8_e4m3"),
+             CompressionPlan("l2", density=0.25, quant="fp8_e5m2")]
+    cfg, model, opt, state, step, _ = _setup(plans=plans, lr=3e-3)
+    batch = _batch(cfg, 2)
+    l0 = None
+    for i in range(10):
+        state, m = step(state, batch)
+        l0 = l0 or float(m["loss"])
+    assert float(m["loss"]) < l0
+
+
+def test_serve_step_runs_on_compressed_params():
+    cfg, model, *_ = _setup("granite-moe-1b-a400m")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    cparams = compress_for_serving(params, DEVICE_TIERS["low"])
+    # pruned weights actually sparse
+    w = cparams["layers"]["moe"]["we_g"]
+    assert float((w == 0).mean()) > 0.5
+    serve = jax.jit(make_serve_step(model))
+    cache = model.init_cache(2, 16)
+    logits, cache = serve(cparams, cache, jnp.zeros((2, 1), jnp.int32),
+                          jnp.int32(0))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_tier_order_invariance():
+    """Aggregation is a weighted sum — permuting tiers must not change the
+    result (up to float addition order)."""
+    plans = default_tier_plans(3)
+    cfg, model, opt, state, _, _ = _setup(plans=plans)
+    batch = _batch(cfg, 3)
+    step_a = jax.jit(make_hetero_train_step(model, opt, plans))
+    perm = [2, 0, 1]
+    step_b = jax.jit(make_hetero_train_step(model, opt,
+                                            [plans[i] for i in perm]))
+    batch_b = {k: v[jnp.array(perm)] for k, v in batch.items()}
+    _, m_a = step_a(state, batch)
+    _, m_b = step_b(state, batch_b)
+    assert abs(float(m_a["loss"]) - float(m_b["loss"])) < 1e-4

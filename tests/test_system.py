@@ -1,0 +1,121 @@
+"""End-to-end behaviour tests for the paper's system: the full federated
+loop (compress -> local train -> hetero-aggregate -> global update ->
+re-compress) must train real models, and compression must deliver the
+paper's claimed trade-offs (smaller payloads, bounded accuracy loss)."""
+import functools
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.configs import get_smoke_config
+from repro.configs.paper_mlp import config as mlp_config
+from repro.core import TrainState, make_hetero_train_step
+from repro.core.compression import (CompressionPlan, DEVICE_TIERS,
+                                    compress_params, default_tier_plans,
+                                    payload_bits)
+from repro.core.federated import Client, FLServer
+from repro.data import make_gaussian_dataset, partition_dirichlet
+from repro.models import get_model, mlp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_full_paper_loop_on_transformer():
+    """The paper's Fig. 1 loop drives an actual LM (smoke-scale granite)
+    across 4 heterogeneous tiers and reduces loss."""
+    cfg = get_smoke_config("granite-3-2b")
+    model = get_model(cfg)
+    opt = optim.adamw(3e-3)
+    state = TrainState.create(model, opt, KEY)
+    step = jax.jit(make_hetero_train_step(model, opt, default_tier_plans(4)))
+    tokens = jax.random.randint(KEY, (4, 2, 33), 0, cfg.vocab_size)
+    first = last = None
+    for _ in range(12):
+        state, m = step(state, {"tokens": tokens})
+        first = first or float(m["loss"])
+        last = float(m["loss"])
+    assert last < first * 0.9
+
+
+def test_noniid_fl_with_clustering_client():
+    """Client-granular FL with a clustering (embedded) tier on non-IID data."""
+    cfg = mlp_config()
+    data = make_gaussian_dataset(KEY, 1600)
+    shards = partition_dirichlet(KEY, data, 4, alpha=0.5)
+    tiers = ["hub", "mid", "low", "embedded"]
+    clients = [Client(i, DEVICE_TIERS[t], shards[i], profile_name=t)
+               for i, t in enumerate(tiers)]
+    model = types.SimpleNamespace(loss_fn=functools.partial(mlp.loss_fn))
+    srv = FLServer(model=model, optimizer=optim.sgd(1.0), clients=clients,
+                   params=mlp.init(KEY, cfg))
+    for _ in range(60):
+        rec = srv.round()
+    val = make_gaussian_dataset(jax.random.PRNGKey(9), 1000)
+    acc = float(mlp.accuracy(srv.params, val["x"], val["y"]))
+    assert acc > 0.85, acc
+
+
+def test_compression_accuracy_tradeoff():
+    """Paper §5: compressed-model accuracy loss is bounded; payload shrinks
+    monotonically with compression aggressiveness."""
+    cfg = mlp_config()
+    params = mlp.init(KEY, cfg)
+    data = make_gaussian_dataset(KEY, 1000)
+    for i in range(100):
+        g = jax.grad(mlp.loss_fn)(params, data)
+        params = jax.tree.map(lambda p, g: p - 1.0 * g, params, g)
+    val = make_gaussian_dataset(jax.random.PRNGKey(9), 1000)
+    base = float(mlp.accuracy(params, val["x"], val["y"]))
+    assert base > 0.95
+
+    for tier, tol in [("high", 0.02), ("mid", 0.05)]:
+        cp, _ = compress_params(params, DEVICE_TIERS[tier])
+        acc = float(mlp.accuracy(cp, val["x"], val["y"]))
+        assert acc > base - tol, (tier, acc, base)
+        assert payload_bits(params, DEVICE_TIERS[tier]) < \
+            payload_bits(params, DEVICE_TIERS["hub"])
+
+    # a 10-neuron MLP has no pruning redundancy: 25%-density post-training
+    # compression collapses it (papers' "accuracy loss is small" claim holds
+    # for over-parameterized models, NOT at this scale) — which is exactly
+    # why the FL loop must TRAIN the compressed model rather than compress
+    # after the fact; test_noniid_fl_with_clustering_client shows the low
+    # tiers reaching >0.85 inside the loop.
+    cp, _ = compress_params(params, DEVICE_TIERS["low"])
+    assert float(mlp.accuracy(cp, val["x"], val["y"])) < base - 0.2
+
+
+def test_straggler_wall_time_reflects_heterogeneity():
+    """Round wall time is set by the slowest device (paper Eq. 1 driver)."""
+    cfg = mlp_config()
+    data = make_gaussian_dataset(KEY, 800)
+    shards = [data] * 2
+    model = types.SimpleNamespace(loss_fn=functools.partial(mlp.loss_fn))
+    fast = FLServer(model=model, optimizer=optim.sgd(1.0),
+                    clients=[Client(0, DEVICE_TIERS["hub"], shards[0], "hub"),
+                             Client(1, DEVICE_TIERS["hub"], shards[1], "hub")],
+                    params=mlp.init(KEY, cfg))
+    slow = FLServer(model=model, optimizer=optim.sgd(1.0),
+                    clients=[Client(0, DEVICE_TIERS["hub"], shards[0], "hub"),
+                             Client(1, DEVICE_TIERS["hub"], shards[1],
+                                    "embedded")],
+                    params=mlp.init(KEY, cfg))
+    t_fast = fast.round()["round_wall_time"]
+    t_slow = slow.round()["round_wall_time"]
+    assert t_slow > t_fast
+
+
+def test_compressed_payload_beats_uncompressed_time_model():
+    """Paper §5 claim: with equal T_global, compressed local models give a
+    SHORTER round than uncompressed ones on the same device."""
+    from repro.core.heterogeneity import PROFILES, round_time
+    cfg = get_smoke_config("granite-3-2b")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    full = round_time(params, DEVICE_TIERS["hub"], PROFILES["mid"], 100)
+    comp = round_time(params, DEVICE_TIERS["low"], PROFILES["mid"], 100)
+    assert comp["T"] < full["T"]
+    assert comp["T_global"] == full["T_global"]
