@@ -1,0 +1,15 @@
+# Test tiers (see README.md):
+#   make test       - the full tier-1 suite (~7 min: kernel sweeps, model
+#                     smokes, convergence runs)
+#   make test-fast  - quick loop (<90 s): everything not marked `slow`
+PYTEST = PYTHONPATH=src python -m pytest -x -q
+
+.PHONY: test test-fast bench
+test:
+	$(PYTEST)
+
+test-fast:
+	$(PYTEST) -m "not slow"
+
+bench:
+	PYTHONPATH=src:. python benchmarks/run.py

@@ -2,6 +2,9 @@
 
 - fl/round_{mode}: wall time of one client-granular federated round on the
   paper MLP fleet (4 tiers), derived = final loss after 30 rounds.
+- fl/scale_{path}_{n}: clients-vs-wall-time scaling curve at n clients /
+  4 plans — per-client loop vs. cohort-vectorized runtime (DESIGN.md §9),
+  derived = per-round loss + (for the cohort rows) speedup over the loop.
 - fl/eq1_{tier}: the paper's Eq. (1) analytic round time per device tier
   for the granite-3-2b model, derived = component breakdown.
 - fl/tierstep_{arch}: one datacenter tier-scanned hetero train step
@@ -20,12 +23,56 @@ from repro.configs import get_smoke_config
 from repro.configs.paper_mlp import config as mlp_config
 from repro.core import TrainState, make_hetero_train_step
 from repro.core.compression import DEVICE_TIERS, default_tier_plans
-from repro.core.federated import Client, FLServer
+from repro.core.federated import Client, CohortFLServer, FLServer
 from repro.core.heterogeneity import PROFILES, round_time
 from repro.data import make_gaussian_dataset, partition_iid
 from repro.models import get_model, mlp
 
 KEY = jax.random.PRNGKey(0)
+# one shared loss_fn identity so the per-plan jit caches in core.federated
+# are hit across all fl/* benches instead of recompiling per section
+MLP_MODEL = types.SimpleNamespace(loss_fn=functools.partial(mlp.loss_fn))
+
+SCALE_POPULATIONS = (32, 256)
+SCALE_TIERS = ("hub", "high", "mid", "low")     # 4 plans
+
+
+def _scaling_rows(rounds: int = 3) -> list[tuple]:
+    """Per-client loop vs. cohort runtime at growing population sizes.
+
+    The loop pays one dispatch + one host sync per client; the cohort path
+    pays one vmapped dispatch per plan and one sync per round, so its
+    wall time is ~flat in the population while the loop's grows linearly.
+    """
+    rows = []
+    model = MLP_MODEL
+    cfg = mlp_config()
+    for n in SCALE_POPULATIONS:
+        data = make_gaussian_dataset(KEY, n * 16)
+        shards = partition_iid(KEY, data, n)
+        clients = [Client(i, DEVICE_TIERS[SCALE_TIERS[i % len(SCALE_TIERS)]],
+                          shards[i],
+                          profile_name=SCALE_TIERS[i % len(SCALE_TIERS)])
+                   for i in range(n)]
+        times = {}
+        for path, mk in (
+                ("loop", lambda: FLServer(
+                    model=model, optimizer=optim.sgd(1.0), clients=clients,
+                    params=mlp.init(KEY, cfg))),
+                ("cohort", lambda: CohortFLServer.from_clients(
+                    clients, model=model, optimizer=optim.sgd(1.0),
+                    params=mlp.init(KEY, cfg)))):
+            srv = mk()
+            srv.round()                          # compile
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                rec = srv.round()
+            times[path] = (time.perf_counter() - t0) / rounds * 1e6
+            derived = f"loss={rec['loss']:.4f}"
+            if path == "cohort":
+                derived += f";speedup_vs_loop={times['loop'] / times['cohort']:.1f}x"
+            rows.append((f"fl/scale_{path}_{n}", times[path], derived))
+    return rows
 
 
 def run() -> list[tuple]:
@@ -33,7 +80,7 @@ def run() -> list[tuple]:
     cfg = mlp_config()
     data = make_gaussian_dataset(KEY, 1600)
     shards = partition_iid(KEY, data, 4)
-    model = types.SimpleNamespace(loss_fn=functools.partial(mlp.loss_fn))
+    model = MLP_MODEL
     tiers = ("hub", "high", "mid", "low")
 
     for mode in ("fedsgd", "fedavg"):
@@ -50,6 +97,8 @@ def run() -> list[tuple]:
         rows.append((f"fl/round_{mode}", us,
                      f"loss_after_30={rec['loss']:.4f};"
                      f"upload_bytes={rec['total_upload_bytes']:.0f}"))
+
+    rows += _scaling_rows()
 
     gcfg = get_smoke_config("granite-3-2b")
     gmodel = get_model(gcfg)

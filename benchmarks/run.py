@@ -1,13 +1,21 @@
 """Benchmark harness — one section per paper table/figure + the system
-benches. Prints ``name,us_per_call,derived`` CSV.
+benches. Prints ``name,us_per_call,derived`` CSV to stdout (one row per
+bench; a failing section emits a ``<title>/ERROR`` row and the harness
+keeps going). Invoke from the repo root:
 
+  PYTHONPATH=src:. python benchmarks/run.py        # or: make bench
+
+Sections:
   fig2/*      paper Fig. 2  (accuracy vs epochs per train-set size)
   fig3/*      paper Fig. 3  (per-epoch time / memory vs train-set size)
   fig4/*      paper Fig. 4  (float64 vs float32)
-  fl/*        federated rounds (fedsgd/fedavg), paper Eq. (1) per tier,
-              datacenter tier-scanned step per arch family
+  fl/*        federated rounds (fedsgd/fedavg), loop-vs-cohort scaling
+              curve (DESIGN.md §9), paper Eq. (1) per tier, datacenter
+              tier-scanned step per arch family
   kernels/*   Pallas kernels (interpret) vs jnp oracle
-  roofline/*  dominant-bottleneck census over the dry-run sweep
+  roofline/*  dominant-bottleneck census over the dry-run sweep — needs
+              ``PYTHONPATH=src python -m repro.launch.dryrun`` run first
+              to populate experiments/dryrun/
 """
 from __future__ import annotations
 

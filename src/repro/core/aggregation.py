@@ -34,6 +34,25 @@ def accumulate(acc, grads, masks, weight):
     return num, den
 
 
+def accumulate_cohort(acc, grad_sum, masks, weight, count):
+    """A whole cohort's contribution in one shot (DESIGN.md §9).
+
+    ``grad_sum`` is the participation-masked SUM of the cohort's per-client
+    gradients; all clients in a cohort share plan ``weight`` and ``masks``,
+    so the per-client loop's ``count`` accumulate() calls collapse to
+
+        num += weight * masks * grad_sum
+        den += weight * count * masks
+
+    ``count`` may be a traced scalar (number of participating clients).
+    """
+    num, den = acc
+    num = jax.tree.map(lambda a, g, m: a + weight * m * g,
+                       num, grad_sum, masks)
+    den = jax.tree.map(lambda a, m: a + weight * count * m, den, masks)
+    return num, den
+
+
 def zeros_like_acc(params):
     num = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     # denominators match mask shapes: full for >=2-D leaves, scalar otherwise

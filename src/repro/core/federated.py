@@ -1,4 +1,5 @@
-"""The federated runtime (paper Fig. 1), client-granular.
+"""The federated runtime (paper Fig. 1): client-granular and
+cohort-vectorized.
 
 This is the faithful simulator of the paper's system loop:
 
@@ -18,6 +19,19 @@ Two aggregation modes (paper §4.2):
 Beyond-paper options (flagged, off by default): gradient-upload
 quantization with per-client error feedback (residual carried locally).
 
+Two round implementations share that loop (DESIGN.md §9):
+
+  - ``FLServer`` — client-granular: one jitted call + one host sync PER
+    CLIENT. Faithful and easy to instrument, but caps simulated
+    populations at a few dozen clients.
+  - ``CohortFLServer`` — cohort-vectorized: clients sharing a
+    ``CompressionPlan`` form a :class:`Cohort`; their data is stacked on a
+    leading axis and one ``vmap``-ed step runs per cohort, so a round is
+    O(#plans) dispatches and ONE device→host sync regardless of
+    population size. Adds the at-scale scenario knobs: partial
+    participation, straggler deadline policies, cohort error-feedback
+    buffers that survive non-participation.
+
 The datacenter-scale counterpart (tiers scanned inside one pjit program) is
 core.steps; this module is client-granular for FL research at MLP/100M
 scale, the paper's own regime.
@@ -30,11 +44,15 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.aggregation import hetero_aggregate
+from repro.core.aggregation import (accumulate_cohort, finalize,
+                                    hetero_aggregate, zeros_like_acc)
 from repro.core.compression import CompressionPlan, compress_params
 from repro.core.compression.quantization import fake_quant_ste
-from repro.core.heterogeneity import PROFILES, round_time
+from repro.core.heterogeneity import (PROFILES, cohort_round_time,
+                                      round_time)
+from repro.data.federated import stack_shards
 from repro.numerics import FORMATS
 
 
@@ -60,13 +78,13 @@ def _client_grad_fn(loss_fn: Callable, plan: CompressionPlan):
     return jax.jit(f)
 
 
-@functools.lru_cache(maxsize=64)
-def _client_local_train_fn(loss_fn: Callable, plan: CompressionPlan,
-                           local_steps: int, lr: float):
-    """FedAvg local training IN COMPRESSED SPACE: w <- C(w - lr·g)."""
-    def f(params, batch):
-        cp0, masks = compress_params(params, plan)
-
+def _local_sgd(loss_fn: Callable, plan: CompressionPlan,
+               local_steps: int, lr: float):
+    """FedAvg local training IN COMPRESSED SPACE: w <- C(w - lr·g).
+    The single definition of the paper's §3.1 requirement (re-compress
+    after every local step), shared by the per-client and cohort paths.
+    Returns (cp0, batch) -> (last_loss, delta)."""
+    def run(cp0, batch):
         def step(w, _):
             loss, g = jax.value_and_grad(lambda p: loss_fn(p, batch))(w)
             w = jax.tree.map(lambda w, g: w - lr * g, w, g)
@@ -75,7 +93,20 @@ def _client_local_train_fn(loss_fn: Callable, plan: CompressionPlan,
 
         w, losses = jax.lax.scan(step, cp0, None, length=local_steps)
         delta = jax.tree.map(lambda a, b: a - b, w, cp0)
-        return losses[-1], delta, masks
+        return losses[-1], delta
+    return run
+
+
+@functools.lru_cache(maxsize=64)
+def _client_local_train_fn(loss_fn: Callable, plan: CompressionPlan,
+                           local_steps: int, lr: float):
+    """One client's FedAvg round (see _local_sgd)."""
+    local = _local_sgd(loss_fn, plan, local_steps, lr)
+
+    def f(params, batch):
+        cp0, masks = compress_params(params, plan)
+        loss, delta = local(cp0, batch)
+        return loss, delta, masks
     return jax.jit(f)
 
 
@@ -155,5 +186,251 @@ class FLServer:
                "client_losses": losses,
                "round_wall_time": max(c["T"] for c in comm),   # stragglers
                "total_upload_bytes": sum(c["payload_bytes"] for c in comm)}
+        self.history.append(rec)
+        return rec
+
+
+# --------------------------------------------------------------------------
+# Cohort-vectorized runtime (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+@dataclass
+class Cohort:
+    """Clients sharing one CompressionPlan, stacked for a vmapped step.
+
+    ``data`` leaves carry a leading client axis ``(C, n, ...)``;
+    ``ef_buffer`` (when upload quantization + error feedback is on) carries
+    per-client residuals stacked the same way, so a non-participating
+    client's residual rides along untouched until it is sampled again.
+    """
+    plan: CompressionPlan
+    client_ids: tuple[int, ...]
+    data: dict
+    profile_names: tuple[str, ...]
+    ef_buffer: Any = None
+
+    @property
+    def size(self) -> int:
+        return len(self.client_ids)
+
+
+def build_cohorts(clients: list[Client]) -> list[Cohort]:
+    """Group clients by plan (plans are frozen/hashable) and stack their
+    shards. Cohort order follows first appearance; within a cohort, client
+    order is preserved."""
+    groups: dict[CompressionPlan, list[Client]] = {}
+    for c in clients:
+        groups.setdefault(c.plan, []).append(c)
+    return [Cohort(plan=plan,
+                   client_ids=tuple(c.id for c in cs),
+                   data=stack_shards([c.data for c in cs]),
+                   profile_names=tuple(c.profile_name for c in cs))
+            for plan, cs in groups.items()]
+
+
+def _upload_and_sum(updates, part, ef, fmt: str | None):
+    """Participation-masked upload of per-client updates ``(C, ...)``:
+    optional quantization with stacked error feedback, then the weighted
+    sum over the client axis. Non-participants' residuals are preserved."""
+    if fmt is not None:
+        f = FORMATS[fmt]
+        corrected = jax.tree.map(lambda u, e: u + e, updates, ef)
+        q = jax.tree.map(
+            lambda c: fake_quant_ste(c, f.e_bits, f.m_bits), corrected)
+
+        def upd_ef(e, c, qq):
+            keep = part.reshape((-1,) + (1,) * (c.ndim - 1)) > 0
+            return jnp.where(keep, c - qq, e)
+
+        ef = jax.tree.map(upd_ef, ef, corrected, q)
+        updates = q
+    u_sum = jax.tree.map(lambda u: jnp.tensordot(part, u, axes=1), updates)
+    return u_sum, ef
+
+
+@functools.lru_cache(maxsize=64)
+def _cohort_grad_fn(loss_fn: Callable, plan: CompressionPlan,
+                    upload_fmt: str | None):
+    """One fedsgd step for a whole cohort: vmap the straight-through
+    compressed-model gradient over the stacked client axis. Masks depend
+    only on (params, plan), so they are computed once per cohort, not per
+    client."""
+    def f(params, batches, part, ef):
+        def per_client(batch):
+            def loss_of(p):
+                cp, _ = compress_params(p, plan)
+                return loss_fn(cp, batch)
+            return jax.value_and_grad(loss_of)(params)
+
+        losses, grads = jax.vmap(per_client)(batches)
+        _, masks = compress_params(params, plan)
+        g_sum, ef = _upload_and_sum(grads, part, ef, upload_fmt)
+        return g_sum, masks, jnp.sum(part * losses), ef
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=64)
+def _cohort_local_train_fn(loss_fn: Callable, plan: CompressionPlan,
+                           local_steps: int, lr: float,
+                           upload_fmt: str | None):
+    """One fedavg step for a whole cohort: every client runs the shared
+    ``_local_sgd`` body, vmapped over the stacked client axis."""
+    local = _local_sgd(loss_fn, plan, local_steps, lr)
+
+    def f(params, batches, part, ef):
+        cp0, masks = compress_params(params, plan)
+        losses, deltas = jax.vmap(lambda batch: local(cp0, batch))(batches)
+        d_sum, ef = _upload_and_sum(deltas, part, ef, upload_fmt)
+        return d_sum, masks, jnp.sum(part * losses), ef
+    return jax.jit(f)
+
+
+@dataclass
+class CohortFLServer:
+    """Cohort-vectorized federated runtime (DESIGN.md §9).
+
+    Numerically equivalent to ``FLServer`` over the same fleet (the
+    equivalence is property-tested), but a round costs O(#plans) jitted
+    dispatches + one device→host sync instead of O(#clients) of each —
+    this is what lets the simulator scale from ~10 clients to thousands.
+
+    Scenario knobs beyond the client-granular server:
+      - ``sample_fraction``: per-round uniform client sampling without
+        replacement across the whole fleet (partial participation).
+      - ``straggler``: ``"wait"`` blocks the round on the slowest sampled
+        client (paper Eq. 1 semantics); ``"drop"`` discards clients whose
+        analytic round time exceeds ``deadline`` seconds, and the round
+        wall-clock becomes the deadline whenever anyone was dropped.
+      - error feedback: residuals live in per-cohort stacked buffers and
+        survive rounds in which their client is not sampled.
+    """
+    model: Any
+    optimizer: Any
+    cohorts: list[Cohort]
+    params: Any
+    opt_state: Any = None
+    mode: str = "fedsgd"            # fedsgd | fedavg
+    local_steps: int = 5
+    local_lr: float = 0.1
+    server_lr: float = 1.0
+    upload_quant: str | None = None
+    error_feedback: bool = False
+    sample_fraction: float = 1.0    # partial participation
+    straggler: str = "wait"         # wait | drop
+    deadline: float | None = None   # seconds, required for straggler="drop"
+    seed: int = 0
+    step: int = 0
+    history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.opt_state is None:
+            self.opt_state = self.optimizer.init(self.params)
+        if self.straggler not in ("wait", "drop"):
+            raise ValueError(f"straggler must be wait|drop, got {self.straggler!r}")
+        if self.straggler == "drop" and self.deadline is None:
+            raise ValueError("straggler='drop' requires a deadline (seconds)")
+
+    @classmethod
+    def from_clients(cls, clients: list[Client], **kw) -> "CohortFLServer":
+        return cls(cohorts=build_cohorts(clients), **kw)
+
+    @property
+    def n_clients(self) -> int:
+        return sum(c.size for c in self.cohorts)
+
+    def _sample_participation(self, rng) -> list[np.ndarray]:
+        """Uniform without-replacement sampling of
+        ``max(1, round(sample_fraction * n_clients))`` clients (round half
+        to even) across all cohorts."""
+        sizes = [c.size for c in self.cohorts]
+        if self.sample_fraction >= 1.0:
+            return [np.ones(s, bool) for s in sizes]
+        n_total = sum(sizes)
+        n_sel = max(1, int(round(self.sample_fraction * n_total)))
+        flat = np.zeros(n_total, bool)
+        flat[rng.choice(n_total, size=n_sel, replace=False)] = True
+        out, off = [], 0
+        for s in sizes:
+            out.append(flat[off:off + s])
+            off += s
+        return out
+
+    def round(self, cohort_batches: list[dict] | None = None,
+              participation: list | None = None) -> dict:
+        """One federated round over all cohorts.
+
+        ``cohort_batches`` (optional) overrides each cohort's stacked full
+        local data; ``participation`` (optional, one bool array per
+        cohort) overrides the sampled participation — tests use it to pin
+        scenarios. Deadline dropping still applies on top of either.
+        """
+        loss_fn = self.model.loss_fn
+        rng = np.random.default_rng([self.seed, self.step])
+        sampled = (self._sample_participation(rng) if participation is None
+                   else [np.asarray(p, bool) for p in participation])
+        acc = zeros_like_acc(self.params)
+        loss_sum = jnp.float32(0.0)
+        n_part_total, n_dropped = 0, 0
+        wall, upload_bytes = 0.0, 0.0
+        for ci, (cohort, part) in enumerate(zip(self.cohorts, sampled)):
+            batches = (cohort.data if cohort_batches is None
+                       else cohort_batches[ci])
+            n_batch = next(iter(batches.values())).shape[1]
+            times = cohort_round_time(
+                self.params, cohort.plan,
+                [PROFILES[p] for p in cohort.profile_names], n_batch,
+                self.local_steps if self.mode == "fedavg" else 1)
+            part = part.copy()
+            if self.straggler == "drop":
+                late = times["T"] > self.deadline
+                n_dropped += int(np.sum(part & late))
+                part &= ~late
+            n_p = int(part.sum())
+            if n_p == 0:
+                continue
+            wall = max(wall, float(times["T"][part].max()))
+            upload_bytes += float(times["payload_bytes"][part].sum())
+            n_part_total += n_p
+
+            ef = cohort.ef_buffer
+            if self.upload_quant is not None and ef is None:
+                ef = jax.tree.map(
+                    lambda p: jnp.zeros((cohort.size,) + p.shape,
+                                        jnp.float32), self.params)
+            elif self.upload_quant is None:
+                ef = ()                     # leafless placeholder pytree
+            if self.mode == "fedsgd":
+                fn = _cohort_grad_fn(loss_fn, cohort.plan, self.upload_quant)
+            else:
+                fn = _cohort_local_train_fn(loss_fn, cohort.plan,
+                                            self.local_steps, self.local_lr,
+                                            self.upload_quant)
+            g_sum, masks, l_sum, new_ef = fn(
+                self.params, batches, jnp.asarray(part, jnp.float32), ef)
+            if self.upload_quant is not None and self.error_feedback:
+                cohort.ef_buffer = new_ef
+            acc = accumulate_cohort(acc, g_sum, masks,
+                                    jnp.float32(cohort.plan.weight),
+                                    jnp.float32(n_p))
+            loss_sum = loss_sum + l_sum
+
+        if n_part_total:
+            agg = finalize(acc)
+            if self.mode == "fedavg":
+                self.params = jax.tree.map(
+                    lambda p, d: p + self.server_lr * d, self.params, agg)
+            else:
+                self.params, self.opt_state = self.optimizer.update(
+                    agg, self.opt_state, self.params, step=self.step)
+        self.step += 1
+        # the round's single device->host sync:
+        mean_loss = (float(jax.device_get(loss_sum)) / n_part_total
+                     if n_part_total else float("nan"))
+        rec = {"step": self.step, "loss": mean_loss,
+               "n_participants": n_part_total, "n_dropped": n_dropped,
+               "round_wall_time": (self.deadline
+                                   if self.straggler == "drop" and n_dropped
+                                   else wall),
+               "total_upload_bytes": upload_bytes}
         self.history.append(rec)
         return rec

@@ -62,6 +62,36 @@ def round_time(params, plan: CompressionPlan, profile: DeviceProfile,
             "payload_bytes": bits / 8}
 
 
+def cohort_round_time(params, plan: CompressionPlan,
+                      profiles: list[DeviceProfile], n_samples,
+                      local_steps: int = 1,
+                      server_flops: float = SERVER_FLOPS) -> dict:
+    """Vectorized Eq. (1) over one cohort (clients sharing ``plan``).
+
+    ``profiles`` has one entry per client; ``n_samples`` is a scalar or a
+    per-client array. Pure numpy on host metadata — evaluating it never
+    touches the accelerator, so the cohort runtime can apply deadline
+    policies without a device sync. Returns a dict of per-client arrays
+    with the same keys as :func:`round_time`.
+    """
+    import jax
+    import numpy as np
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    bits = payload_bits(params, plan)
+    flops = np.array([p.flops for p in profiles], np.float64)
+    up = np.array([p.up_bps for p in profiles], np.float64)
+    down = np.array([p.down_bps for p in profiles], np.float64)
+    ns = np.broadcast_to(np.asarray(n_samples, np.float64), flops.shape)
+    t_local = local_steps * train_flops(n_params * plan.density, ns) / flops
+    t_up = bits / up
+    t_global = np.full_like(flops, train_flops(n_params, 1) / server_flops)
+    t_down = bits / down
+    return {"T_local": t_local, "T_upload": t_up, "T_global": t_global,
+            "T_download": t_down,
+            "T": t_local + t_up + t_global + t_down,
+            "payload_bytes": np.full_like(flops, bits / 8)}
+
+
 def memory_overhead(params, plan: CompressionPlan, batch: int,
                     act_bytes_per_sample: float = 0.0) -> float:
     """Training memory on-device: compressed weights + grads + activations."""

@@ -1,3 +1,4 @@
 from repro.data.gaussian import make_gaussian_dataset, paper_splits  # noqa: F401
 from repro.data.synthetic import TokenStream, make_train_batch  # noqa: F401
-from repro.data.federated import partition_iid, partition_dirichlet  # noqa: F401
+from repro.data.federated import (partition_iid, partition_dirichlet,
+                                  stack_shards)  # noqa: F401

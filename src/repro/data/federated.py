@@ -1,5 +1,6 @@
 """Federated partitioners: split a dataset across clients, IID or label-skew
-non-IID (Dirichlet), the standard FL evaluation protocols."""
+non-IID (Dirichlet), the standard FL evaluation protocols — plus cohort
+batch stacking for the vectorized runtime (DESIGN.md §9)."""
 from __future__ import annotations
 
 import jax
@@ -32,3 +33,17 @@ def partition_dirichlet(key, dataset: dict, n_clients: int,
         sel = jnp.asarray(sorted(idx_per_client[ci]), jnp.int32)
         out.append({k: v[sel] for k, v in dataset.items()})
     return out
+
+
+def stack_shards(shards: list[dict]) -> dict:
+    """Stack per-client shards into leading-axis cohort batches.
+
+    ``[{k: (n_i, ...)}] -> {k: (C, n, ...)}`` where ``n`` is the smallest
+    shard length — vmap needs a rectangular batch, so longer shards are
+    truncated to the common floor (with Dirichlet skew this drops tail
+    samples; use equal-size IID shards when exact data parity with the
+    per-client loop matters). Single host sync-free reshape, done once at
+    cohort build time, not per round.
+    """
+    n = min(next(iter(s.values())).shape[0] for s in shards)
+    return {k: jnp.stack([s[k][:n] for s in shards]) for k in shards[0]}

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the first two lines: jax locks the device count on first init.
 """Multi-pod dry-run: lower + compile every (architecture x input-shape)
 on the production meshes, record memory/cost/collective analysis.
 
@@ -8,10 +5,18 @@ on the production meshes, record memory/cost/collective analysis.
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
       --shape train_4k --mesh single
 
-Outputs one JSON per (arch, shape, mesh) under experiments/dryrun/.
-This is the proof that the distribution config is coherent: a sharding
-mismatch, compile-time OOM, or unsupported collective fails the run.
+Produces one JSON per (arch, shape, mesh) under experiments/dryrun/ —
+compile wall time, per-device HLO memory/FLOP/byte analysis, and the
+collective census that ``benchmarks/roofline.py`` (and the ``roofline/*``
+rows of ``benchmarks/run.py``) consume. No device memory is allocated:
+states are ``jax.eval_shape`` stand-ins. This is the proof that the
+distribution config is coherent: a sharding mismatch, compile-time OOM,
+or unsupported collective fails the run.
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before the first jax import: jax locks the device count on
+#   first init (safe below the docstring — nothing is imported above).
 import argparse
 import json
 import re

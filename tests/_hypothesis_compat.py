@@ -1,0 +1,83 @@
+"""Offline fallback for ``hypothesis``.
+
+The test image does not always ship hypothesis (no network installs).
+``from _hypothesis_compat import given, settings, strategies`` uses the
+real library when it is importable and otherwise degrades ``@given`` to a
+fixed-seed sampled ``pytest.mark.parametrize``: each strategy draws a
+deterministic sequence of examples (boundary values first, then uniform
+samples from a seeded RNG), so the property tests still collect and run —
+with less adversarial coverage, but bit-identical across runs.
+
+Only the strategy combinators this repo uses are implemented
+(``integers``, ``floats``, ``lists``, ``sampled_from``, ``booleans``);
+extend ``_Fallback`` if a test needs more.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 8          # per test; boundary example + 7 random draws
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        """A sampler: ``boundary()`` gives the low-edge value, ``draw(rng)``
+        a random one."""
+
+        def __init__(self, boundary, draw):
+            self.boundary = boundary
+            self.draw = draw
+
+    class _Fallback:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 31):
+            return _Strategy(lambda: min_value,
+                             lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda: min_value,
+                             lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(
+                lambda: [elements.boundary() for _ in range(min_size)], draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda: seq[0], lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda: False, lambda rng: rng.random() < 0.5)
+
+    strategies = _Fallback()
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*strats):
+        def deco(f):
+            rng = random.Random(_SEED)
+            examples = [tuple(s.boundary() for s in strats)]
+            examples += [tuple(s.draw(rng) for s in strats)
+                         for _ in range(_N_EXAMPLES - 1)]
+
+            def run_example(_hyp_example):
+                f(*_hyp_example)
+
+            run_example.__name__ = f.__name__
+            run_example.__doc__ = f.__doc__
+            return pytest.mark.parametrize("_hyp_example", examples)(run_example)
+        return deco

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full-model compiles/convergence; see pytest.ini
+
 from repro.configs import get_smoke_config
 from repro.models import get_model
 from repro.models.decoder import forward as dec_forward

@@ -33,6 +33,7 @@ def _val_acc(params):
     return float(mlp.accuracy(params, val["x"], val["y"]))
 
 
+@pytest.mark.slow
 def test_fedsgd_hetero_converges():
     srv = _server("fedsgd")
     for _ in range(80):
@@ -41,6 +42,7 @@ def test_fedsgd_hetero_converges():
     assert _val_acc(srv.params) > 0.9
 
 
+@pytest.mark.slow
 def test_fedavg_hetero_converges():
     srv = _server("fedavg", local_steps=5, local_lr=1.0)
     for _ in range(16):
@@ -49,6 +51,7 @@ def test_fedavg_hetero_converges():
     assert _val_acc(srv.params) > 0.9
 
 
+@pytest.mark.slow
 def test_fedavg_fewer_rounds_than_fedsgd():
     """The paper's §4.2 observation: FedAvg needs fewer communication rounds."""
     def rounds_to(target, srv, cap):
@@ -79,6 +82,7 @@ def test_identical_plans_match_plain_fedsgd():
         assert float(jnp.max(jnp.abs(a - b))) < 1e-5
 
 
+@pytest.mark.slow
 def test_upload_quantization_with_error_feedback_converges():
     srv = _server("fedsgd", upload_quant="fp8_e4m3", error_feedback=True)
     for _ in range(80):

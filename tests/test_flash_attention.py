@@ -26,6 +26,7 @@ def _qkv(b, tq, s, h, hkv, hd, dtype=jnp.float32):
     (1, 64, 192, 6, 3, 128),       # cross-length
     (1, 37, 53, 2, 1, 64),         # very ragged
 ])
+@pytest.mark.slow
 def test_sweep_causal(b, tq, s, h, hkv, hd):
     q, k, v = _qkv(b, tq, s, h, hkv, hd)
     o = flash_attention(q, k, v, q_offset=s - tq)
@@ -78,6 +79,7 @@ def test_q_offset_decode_chunk_semantics():
                                rtol=1e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_use_flash_config_path_matches_chunked():
     """cfg.use_flash swaps the model's attention onto the kernel — the
     whole-model loss must be identical to the jnp path."""

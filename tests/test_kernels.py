@@ -15,6 +15,7 @@ from repro.kernels.masked_matmul.ref import masked_matmul_ref
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("shape", [(16,), (100, 37), (8, 16, 32), (1, 1),
                                    (999,), (256, 512)])
 @pytest.mark.parametrize("em", [(4, 3), (5, 2), (8, 7), (5, 10), (2, 1),
@@ -42,6 +43,7 @@ def test_fake_quant_grad_is_clip_aware_ste():
     assert g.tolist() == [1.0, 0.0, 0.0]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (64, 200, 96),
                                    (1, 128, 128), (130, 257, 129),
                                    (256, 384, 512)])
@@ -56,6 +58,7 @@ def test_masked_matmul_sweep(m, k, n):
                                rtol=1e-4, atol=1e-4 * k ** 0.5)
 
 
+@pytest.mark.slow
 def test_masked_matmul_grads_match_ref():
     ks = jax.random.split(KEY, 3)
     x = jax.random.normal(ks[0], (32, 64))
@@ -74,6 +77,7 @@ def test_masked_matmul_grads_match_ref():
     assert bool(jnp.all(jnp.where(mask == 0, gw == 0, True)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("m,k,n,codes", [(64, 128, 64, 16), (128, 256, 128, 4),
                                          (32, 100, 60, 256), (1, 128, 128, 2)])
 def test_codebook_matmul_sweep(m, k, n, codes):
@@ -97,6 +101,7 @@ def test_codebook_matmul_int8_indices():
         np.asarray(codebook_matmul_ref(x, idx, cb)), rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("t,n", [(2, 100), (4, 4096), (8, 1 << 15), (1, 7)])
 def test_grad_aggregate_sweep(t, n):
     ks = jax.random.split(KEY, 2)

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # full-model compiles/convergence; see pytest.ini
+
 from repro import optim
 from repro.configs import ARCHS, get_smoke_config
 from repro.core import TrainState, make_hetero_train_step

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full-model compiles/convergence; see pytest.ini
+
 from repro import optim
 from repro.configs import get_smoke_config
 from repro.core import TrainState, make_hetero_train_step

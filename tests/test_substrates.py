@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro import optim
 from repro.checkpoint import Checkpointer, load_pytree, save_pytree
@@ -136,6 +136,7 @@ def test_checkpoint_shape_mismatch_raises():
             load_pytree({"w": jnp.zeros((3, 3))}, p)
 
 
+@pytest.mark.slow
 def test_checkpoint_train_state_resume():
     from repro.core import TrainState, make_hetero_train_step
     from repro.core.compression import default_tier_plans

@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # full-model compiles/convergence; see pytest.ini
+
 from repro import optim
 from repro.configs import get_smoke_config
 from repro.configs.paper_mlp import config as mlp_config
