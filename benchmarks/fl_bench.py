@@ -5,6 +5,10 @@
 - fl/scale_{path}_{n}: clients-vs-wall-time scaling curve at n clients /
   4 plans — per-client loop vs. cohort-vectorized runtime (DESIGN.md §9),
   derived = per-round loss + (for the cohort rows) speedup over the loop.
+- fl/async_{path}_{n}: simulated (virtual-clock) time for the async
+  staleness-aware runtime (DESIGN.md §10) to reach the sync-wait
+  baseline's round-50 loss on the heterogeneous hub/mid/low 256-client /
+  4-plan fleet, derived = sim-time speedup + staleness profile.
 - fl/eq1_{tier}: the paper's Eq. (1) analytic round time per device tier
   for the granite-3-2b model, derived = component breakdown.
 - fl/tierstep_{arch}: one datacenter tier-scanned hetero train step
@@ -23,7 +27,8 @@ from repro.configs import get_smoke_config
 from repro.configs.paper_mlp import config as mlp_config
 from repro.core import TrainState, make_hetero_train_step
 from repro.core.compression import DEVICE_TIERS, default_tier_plans
-from repro.core.federated import Client, CohortFLServer, FLServer
+from repro.core.federated import (AsyncFLServer, Client, CohortFLServer,
+                                  FLServer)
 from repro.core.heterogeneity import PROFILES, round_time
 from repro.data import make_gaussian_dataset, partition_iid
 from repro.models import get_model, mlp
@@ -37,6 +42,16 @@ SCALE_POPULATIONS = (32, 256)
 SCALE_TIERS = ("hub", "high", "mid", "low")     # 4 plans
 
 
+def _make_fleet(n: int, profiles: tuple = SCALE_TIERS) -> list[Client]:
+    """n clients over the 4 SCALE_TIERS plans on equal IID shards of 16
+    samples each, with ``profile_name`` cycling over ``profiles``."""
+    data = make_gaussian_dataset(KEY, n * 16)
+    shards = partition_iid(KEY, data, n)
+    return [Client(i, DEVICE_TIERS[SCALE_TIERS[i % len(SCALE_TIERS)]],
+                   shards[i], profile_name=profiles[i % len(profiles)])
+            for i in range(n)]
+
+
 def _scaling_rows(rounds: int = 3) -> list[tuple]:
     """Per-client loop vs. cohort runtime at growing population sizes.
 
@@ -48,12 +63,7 @@ def _scaling_rows(rounds: int = 3) -> list[tuple]:
     model = MLP_MODEL
     cfg = mlp_config()
     for n in SCALE_POPULATIONS:
-        data = make_gaussian_dataset(KEY, n * 16)
-        shards = partition_iid(KEY, data, n)
-        clients = [Client(i, DEVICE_TIERS[SCALE_TIERS[i % len(SCALE_TIERS)]],
-                          shards[i],
-                          profile_name=SCALE_TIERS[i % len(SCALE_TIERS)])
-                   for i in range(n)]
+        clients = _make_fleet(n)
         times = {}
         for path, mk in (
                 ("loop", lambda: FLServer(
@@ -72,6 +82,62 @@ def _scaling_rows(rounds: int = 3) -> list[tuple]:
             if path == "cohort":
                 derived += f";speedup_vs_loop={times['loop'] / times['cohort']:.1f}x"
             rows.append((f"fl/scale_{path}_{n}", times[path], derived))
+    return rows
+
+
+ASYNC_N = 256
+ASYNC_ROUNDS = 50
+ASYNC_BUFFER = 64
+# speed-heterogeneous profile mix: the sync round blocks on the Pi-Zero
+# class tier, which is exactly what the async runtime stops paying for
+ASYNC_PROFILES = ("hub", "mid", "mid", "low")
+
+
+def _async_rows() -> list[tuple]:
+    """Async vs sync-wait on the 256-client / 4-plan hub/mid/low fleet:
+    virtual-clock seconds to reach the sync baseline's round-50 loss."""
+    clients = _make_fleet(ASYNC_N, profiles=ASYNC_PROFILES)
+    params = mlp.init(KEY, mlp_config())
+    rows = []
+
+    sync = CohortFLServer.from_clients(
+        clients, model=MLP_MODEL, optimizer=optim.sgd(1.0), params=params,
+        straggler="wait")
+    sync.round()                                 # compile
+    t0 = time.perf_counter()
+    for _ in range(ASYNC_ROUNDS - 1):
+        rec = sync.round()
+    us = (time.perf_counter() - t0) / (ASYNC_ROUNDS - 1) * 1e6
+    target = rec["loss"]
+    sim_sync = sum(r["round_wall_time"] for r in sync.history)
+    rows.append((f"fl/async_syncwait_{ASYNC_N}", us,
+                 f"loss_round50={target:.4f};sim_T={sim_sync:.3f}s"))
+
+    asy = AsyncFLServer.from_clients(
+        clients, model=MLP_MODEL, optimizer=optim.sgd(1.0), params=params,
+        buffer_size=ASYNC_BUFFER, staleness_exp=0.5)
+    asy.step()                                   # compile
+    t0 = time.perf_counter()
+    sim_async, n_win = None, 1
+    # window losses are per-buffer means (noisier than full-fleet means),
+    # so the crossing check uses a 4-window moving average
+    cap = ASYNC_ROUNDS * ASYNC_N // ASYNC_BUFFER * 4
+    while n_win < cap:
+        rec = asy.step()
+        n_win += 1
+        recent = [r["loss"] for r in asy.history[-4:]]
+        if len(recent) == 4 and sum(recent) / 4 <= target:
+            sim_async = rec["t"]
+            break
+    us_a = (time.perf_counter() - t0) / (n_win - 1) * 1e6
+    stale = [r["staleness_mean"] for r in asy.history]
+    derived = (f"sim_T_to_loss={sim_async:.3f}s;"
+               f"sim_speedup={sim_sync / sim_async:.1f}x"
+               if sim_async is not None
+               else f"target_not_reached_in_{n_win}_windows")
+    rows.append((f"fl/async_buf{ASYNC_BUFFER}_{ASYNC_N}", us_a,
+                 derived + f";windows={n_win};"
+                 f"staleness_mean={sum(stale) / len(stale):.2f}"))
     return rows
 
 
@@ -99,6 +165,7 @@ def run() -> list[tuple]:
                      f"upload_bytes={rec['total_upload_bytes']:.0f}"))
 
     rows += _scaling_rows()
+    rows += _async_rows()
 
     gcfg = get_smoke_config("granite-3-2b")
     gmodel = get_model(gcfg)

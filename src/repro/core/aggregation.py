@@ -34,20 +34,30 @@ def accumulate(acc, grads, masks, weight):
     return num, den
 
 
-def accumulate_cohort(acc, grad_sum, masks, weight, count):
+def accumulate_cohort(acc, grad_sum, masks, weight, count,
+                      staleness_weight=None):
     """A whole cohort's contribution in one shot (DESIGN.md §9).
 
     ``grad_sum`` is the participation-masked SUM of the cohort's per-client
     gradients; all clients in a cohort share plan ``weight`` and ``masks``,
     so the per-client loop's ``count`` accumulate() calls collapse to
 
-        num += weight * masks * grad_sum
+        num += weight * staleness_weight * masks * grad_sum
         den += weight * count * masks
 
     ``count`` may be a traced scalar (number of participating clients).
+
+    ``staleness_weight`` is the async runtime's polynomial discount
+    ``(1+s)^-a`` (DESIGN.md §10). It scales the NUMERATOR only: a buffer
+    of uniformly stale updates is damped absolutely (FedAsync-style —
+    were it in both, a lone group's discount would cancel in
+    :func:`finalize`), and in a mixed buffer stale groups are additionally
+    down-weighted relative to fresh ones. At staleness 0 (weight 1, the
+    default) this is exactly the synchronous contribution.
     """
     num, den = acc
-    num = jax.tree.map(lambda a, g, m: a + weight * m * g,
+    scale = weight if staleness_weight is None else weight * staleness_weight
+    num = jax.tree.map(lambda a, g, m: a + scale * m * g,
                        num, grad_sum, masks)
     den = jax.tree.map(lambda a, m: a + weight * count * m, den, masks)
     return num, den

@@ -19,7 +19,7 @@ Two aggregation modes (paper §4.2):
 Beyond-paper options (flagged, off by default): gradient-upload
 quantization with per-client error feedback (residual carried locally).
 
-Two round implementations share that loop (DESIGN.md §9):
+Three round implementations share that loop (DESIGN.md §9–§10):
 
   - ``FLServer`` — client-granular: one jitted call + one host sync PER
     CLIENT. Faithful and easy to instrument, but caps simulated
@@ -31,6 +31,12 @@ Two round implementations share that loop (DESIGN.md §9):
     population size. Adds the at-scale scenario knobs: partial
     participation, straggler deadline policies, cohort error-feedback
     buffers that survive non-participation.
+  - ``AsyncFLServer`` — event-driven: a virtual-clock scheduler
+    (``core/schedule.py``) buffers uploads as their analytic Eq. (1)
+    finish times land, and each buffered aggregation applies
+    staleness-discounted updates against whatever global version each
+    client last downloaded. Stragglers stop blocking rounds without
+    giving up the vmapped cohort fast path.
 
 The datacenter-scale counterpart (tiers scanned inside one pjit program) is
 core.steps; this module is client-granular for FL research at MLP/100M
@@ -52,6 +58,7 @@ from repro.core.compression import CompressionPlan, compress_params
 from repro.core.compression.quantization import fake_quant_ste
 from repro.core.heterogeneity import (PROFILES, cohort_round_time,
                                       round_time)
+from repro.core.schedule import VirtualClockScheduler
 from repro.data.federated import stack_shards
 from repro.numerics import FORMATS
 
@@ -174,13 +181,7 @@ class FLServer:
                                    self.local_steps if self.mode == "fedavg" else 1))
 
         agg = hetero_aggregate(grads_list, masks_list, weights)
-        if self.mode == "fedavg":
-            # aggregated delta applied with server lr (no optimizer stats)
-            self.params = jax.tree.map(
-                lambda p, d: p + self.server_lr * d, self.params, agg)
-        else:
-            self.params, self.opt_state = self.optimizer.update(
-                agg, self.opt_state, self.params, step=self.step)
+        _apply_update(self, agg, self.step)
         self.step += 1
         rec = {"step": self.step, "loss": sum(losses) / len(losses),
                "client_losses": losses,
@@ -226,6 +227,14 @@ def build_cohorts(clients: list[Client]) -> list[Cohort]:
                    data=stack_shards([c.data for c in cs]),
                    profile_names=tuple(c.profile_name for c in cs))
             for plan, cs in groups.items()]
+
+
+def _init_cohort_ef(size: int, params):
+    """Zero-initialized stacked error-feedback buffer for a cohort: one
+    residual row per client, matching each param leaf's dtype (residuals
+    must live in the same space as the gradients they correct)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((size,) + p.shape, p.dtype), params)
 
 
 def _upload_and_sum(updates, part, ef, fmt: str | None):
@@ -285,6 +294,43 @@ def _cohort_local_train_fn(loss_fn: Callable, plan: CompressionPlan,
     return jax.jit(f)
 
 
+def _apply_update(server, agg, step: int) -> None:
+    """The server-side model update shared by all three runtimes: fedavg
+    applies the aggregated delta with the server lr (no optimizer stats),
+    fedsgd feeds the aggregated gradient to the optimizer."""
+    if server.mode == "fedavg":
+        server.params = jax.tree.map(
+            lambda p, d: p + server.server_lr * d, server.params, agg)
+    else:
+        server.params, server.opt_state = server.optimizer.update(
+            agg, server.opt_state, server.params, step=step)
+
+
+def _cohort_upload(server, cohort: Cohort, batches, part, params):
+    """One cohort's participation-masked upload, shared by the sync and
+    async runtimes: dispatch the cached vmapped step (fedsgd/fedavg) for
+    ``part``'s rows of ``batches`` against ``params``, managing the
+    cohort's lazily-initialized stacked EF buffer. Returns
+    ``(grad_sum, masks, loss_sum)``."""
+    ef = cohort.ef_buffer
+    if server.upload_quant is not None and ef is None:
+        ef = _init_cohort_ef(cohort.size, params)
+    elif server.upload_quant is None:
+        ef = ()                     # leafless placeholder pytree
+    loss_fn = server.model.loss_fn
+    if server.mode == "fedsgd":
+        fn = _cohort_grad_fn(loss_fn, cohort.plan, server.upload_quant)
+    else:
+        fn = _cohort_local_train_fn(loss_fn, cohort.plan,
+                                    server.local_steps, server.local_lr,
+                                    server.upload_quant)
+    g_sum, masks, l_sum, new_ef = fn(params, batches,
+                                     jnp.asarray(part, jnp.float32), ef)
+    if server.upload_quant is not None and server.error_feedback:
+        cohort.ef_buffer = new_ef
+    return g_sum, masks, l_sum
+
+
 @dataclass
 class CohortFLServer:
     """Cohort-vectorized federated runtime (DESIGN.md §9).
@@ -325,6 +371,11 @@ class CohortFLServer:
     def __post_init__(self):
         if self.opt_state is None:
             self.opt_state = self.optimizer.init(self.params)
+        if self.straggler == "async":
+            raise ValueError(
+                "straggler='async' is the buffered staleness-aware regime "
+                "(DESIGN.md §10) — build an AsyncFLServer.from_clients(..., "
+                "buffer_size=..., staleness_exp=...) instead")
         if self.straggler not in ("wait", "drop"):
             raise ValueError(f"straggler must be wait|drop, got {self.straggler!r}")
         if self.straggler == "drop" and self.deadline is None:
@@ -364,7 +415,6 @@ class CohortFLServer:
         cohort) overrides the sampled participation — tests use it to pin
         scenarios. Deadline dropping still applies on top of either.
         """
-        loss_fn = self.model.loss_fn
         rng = np.random.default_rng([self.seed, self.step])
         sampled = (self._sample_participation(rng) if participation is None
                    else [np.asarray(p, bool) for p in participation])
@@ -392,36 +442,15 @@ class CohortFLServer:
             upload_bytes += float(times["payload_bytes"][part].sum())
             n_part_total += n_p
 
-            ef = cohort.ef_buffer
-            if self.upload_quant is not None and ef is None:
-                ef = jax.tree.map(
-                    lambda p: jnp.zeros((cohort.size,) + p.shape,
-                                        jnp.float32), self.params)
-            elif self.upload_quant is None:
-                ef = ()                     # leafless placeholder pytree
-            if self.mode == "fedsgd":
-                fn = _cohort_grad_fn(loss_fn, cohort.plan, self.upload_quant)
-            else:
-                fn = _cohort_local_train_fn(loss_fn, cohort.plan,
-                                            self.local_steps, self.local_lr,
-                                            self.upload_quant)
-            g_sum, masks, l_sum, new_ef = fn(
-                self.params, batches, jnp.asarray(part, jnp.float32), ef)
-            if self.upload_quant is not None and self.error_feedback:
-                cohort.ef_buffer = new_ef
+            g_sum, masks, l_sum = _cohort_upload(self, cohort, batches,
+                                                 part, self.params)
             acc = accumulate_cohort(acc, g_sum, masks,
                                     jnp.float32(cohort.plan.weight),
                                     jnp.float32(n_p))
             loss_sum = loss_sum + l_sum
 
         if n_part_total:
-            agg = finalize(acc)
-            if self.mode == "fedavg":
-                self.params = jax.tree.map(
-                    lambda p, d: p + self.server_lr * d, self.params, agg)
-            else:
-                self.params, self.opt_state = self.optimizer.update(
-                    agg, self.opt_state, self.params, step=self.step)
+            _apply_update(self, finalize(acc), self.step)
         self.step += 1
         # the round's single device->host sync:
         mean_loss = (float(jax.device_get(loss_sum)) / n_part_total
@@ -433,4 +462,162 @@ class CohortFLServer:
                                    else wall),
                "total_upload_bytes": upload_bytes}
         self.history.append(rec)
+        return rec
+
+
+# --------------------------------------------------------------------------
+# Asynchronous staleness-aware runtime (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+@dataclass
+class AsyncFLServer:
+    """Event-driven asynchronous federated runtime (DESIGN.md §10).
+
+    A :class:`~repro.core.schedule.VirtualClockScheduler` turns each
+    client's analytic Eq. (1) round time into upload-arrival events; the
+    server aggregates once ``buffer_size`` uploads are buffered (FedBuff
+    shape). Each client trains against the global version it last
+    downloaded, so an aggregation window can mix model versions: uploads
+    are re-batched into (cohort, version) groups and each group runs the
+    SAME vmapped cohort step as ``CohortFLServer`` — the fast path
+    survives asynchrony because a group's participation mask selects its
+    clients out of the cohort's stacked data, so no recompilation and
+    O(#groups) dispatches per window.
+
+    A group at staleness ``s = current_version - downloaded_version``
+    contributes with the polynomial discount ``(1+s)^-staleness_exp``
+    threaded through :func:`~repro.core.aggregation.accumulate_cohort`;
+    ``staleness_exp=0`` disables the discount.
+
+    Equivalence limit (property-tested): with ``buffer_size ==
+    n_clients`` and ``staleness_exp=0``, every window consumes exactly
+    one upload per client, all trained on the live version — the
+    trajectory reproduces ``CohortFLServer``'s sync-wait run.
+
+    The server retains every global version some in-flight client is
+    still training against (refcounted, dropped when the last trainer
+    uploads), so memory is O(live versions) extra copies of ``params`` —
+    bounded by ``n_clients`` and in practice by the speed spread.
+    """
+    model: Any
+    optimizer: Any
+    cohorts: list[Cohort]
+    params: Any
+    opt_state: Any = None
+    mode: str = "fedsgd"            # fedsgd | fedavg
+    local_steps: int = 5
+    local_lr: float = 0.1
+    server_lr: float = 1.0
+    upload_quant: str | None = None
+    error_feedback: bool = False
+    buffer_size: int = 1            # uploads per aggregation (K of FedBuff)
+    staleness_exp: float = 0.5      # a in (1+s)^-a; 0 turns the discount off
+    time_jitter: float = 0.0        # lognormal sigma on per-dispatch times
+    seed: int = 0
+    # global model version (= windows applied); starts at 0 with the
+    # scheduler's clock, so it is state, not a constructor knob
+    version: int = field(default=0, init=False)
+    history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.opt_state is None:
+            self.opt_state = self.optimizer.init(self.params)
+        if self.mode not in ("fedsgd", "fedavg"):
+            raise ValueError(f"mode must be fedsgd|fedavg, got {self.mode!r}")
+        if self.staleness_exp < 0:
+            raise ValueError("staleness_exp must be >= 0")
+        # flatten the fleet into scheduler slots: client index -> cohort row
+        self._slots: list[tuple[int, int]] = []
+        times, payload = [], []
+        for ci, cohort in enumerate(self.cohorts):
+            n_batch = next(iter(cohort.data.values())).shape[1]
+            t = cohort_round_time(
+                self.params, cohort.plan,
+                [PROFILES[p] for p in cohort.profile_names], n_batch,
+                self.local_steps if self.mode == "fedavg" else 1)
+            for r in range(cohort.size):
+                self._slots.append((ci, r))
+                times.append(float(t["T"][r]))
+                payload.append(float(t["payload_bytes"][r]))
+        self._payload_bytes = payload
+        self._sched = VirtualClockScheduler(
+            times, self.buffer_size, seed=self.seed, jitter=self.time_jitter)
+        # version store: every global version an in-flight client trains
+        # against, refcounted by outstanding dispatches
+        self._versions = {self.version: self.params}
+        self._refs = {self.version: len(times)}
+
+    @classmethod
+    def from_clients(cls, clients: list[Client], **kw) -> "AsyncFLServer":
+        return cls(cohorts=build_cohorts(clients), **kw)
+
+    @property
+    def n_clients(self) -> int:
+        return sum(c.size for c in self.cohorts)
+
+    @property
+    def n_versions_live(self) -> int:
+        return len(self._versions)
+
+    def step(self) -> dict:
+        """One buffered aggregation window: advance the virtual clock to
+        the next ``buffer_size`` upload arrivals, apply their
+        staleness-discounted aggregate, publish the new global version."""
+        win = self._sched.next_window()
+        # re-batch the window's uploads into (cohort, version) groups so
+        # each group shares params AND plan — one vmapped dispatch each
+        groups: dict[tuple[int, int], list[int]] = {}
+        for u in win.uploads:
+            ci, row = self._slots[u.client]
+            groups.setdefault((ci, u.version), []).append(row)
+
+        acc = zeros_like_acc(self.params)
+        loss_sum = jnp.float32(0.0)
+        upload_bytes = sum(self._payload_bytes[u.client]
+                           for u in win.uploads)
+        for (ci, v), rows in sorted(groups.items()):
+            cohort = self.cohorts[ci]
+            part = np.zeros(cohort.size, bool)
+            part[rows] = True
+            g_sum, masks, l_sum = _cohort_upload(self, cohort, cohort.data,
+                                                 part, self._versions[v])
+            discount = (1.0 + (win.version - v)) ** (-self.staleness_exp)
+            acc = accumulate_cohort(acc, g_sum, masks,
+                                    jnp.float32(cohort.plan.weight),
+                                    jnp.float32(len(rows)),
+                                    staleness_weight=jnp.float32(discount))
+            loss_sum = loss_sum + l_sum
+
+        _apply_update(self, finalize(acc), win.version)
+
+        # version bookkeeping: consumed clients re-download the new global
+        self.version = win.version + 1
+        for u in win.uploads:
+            self._refs[u.version] -= 1
+        self._versions[self.version] = self.params
+        self._refs[self.version] = (self._refs.get(self.version, 0)
+                                    + len(win.uploads))
+        for v in [v for v, c in self._refs.items()
+                  if c == 0 and v != self.version]:
+            del self._refs[v]
+            del self._versions[v]
+
+        stale = win.stalenesses
+        # the window's single device->host sync:
+        mean_loss = float(jax.device_get(loss_sum)) / len(win.uploads)
+        rec = {"step": self.version, "t": win.t, "loss": mean_loss,
+               "n_updates": len(win.uploads),
+               "staleness_mean": float(np.mean(stale)),
+               "staleness_max": int(max(stale)),
+               "n_versions_live": self.n_versions_live,
+               "total_upload_bytes": upload_bytes}
+        self.history.append(rec)
+        return rec
+
+    def run(self, n_windows: int) -> dict:
+        """Apply ``n_windows`` aggregation windows; returns the last record."""
+        if n_windows < 1:
+            raise ValueError(f"n_windows must be >= 1, got {n_windows}")
+        for _ in range(n_windows):
+            rec = self.step()
         return rec

@@ -1,0 +1,155 @@
+"""Virtual-clock scheduler for the asynchronous federated runtime
+(DESIGN.md §10).
+
+The synchronous runtimes advance in lockstep rounds; the async runtime
+advances on an event queue over a *virtual* clock driven by the analytic
+Eq. (1) round times (DESIGN.md §8): client c, dispatched at virtual time
+``t`` against global version ``v``, lands its upload at
+``t + dispatch_time(c, k)``. The server consumes uploads in arrival order
+and aggregates once ``buffer_size`` of them are buffered (the FedBuff
+shape); the consumed clients then re-download the new global version and
+restart at the aggregation time.
+
+The scheduler is pure host-side bookkeeping — no jax, no device work —
+and fully deterministic given ``(times, buffer_size, seed, jitter)``:
+ties in arrival time break on the dispatch sequence number, and the
+per-dispatch lognormal jitter is seeded per ``(seed, client, dispatch)``.
+Determinism is property-tested against a list-scan reference simulator in
+``tests/test_async.py`` (same seed ⇒ identical apply order).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Upload:
+    """One client's finished local round arriving at the server."""
+    t: float            # virtual arrival time (seconds)
+    seq: int            # dispatch sequence number — deterministic tie-break
+    client: int         # scheduler client index (position in ``times``)
+    version: int        # global model version the client trained against
+
+
+@dataclass(frozen=True)
+class Window:
+    """One buffered aggregation: the uploads consumed, in apply order."""
+    t: float            # aggregation time = arrival of the last upload
+    version: int        # global version BEFORE this window is applied
+    uploads: tuple[Upload, ...]
+
+    @property
+    def stalenesses(self) -> tuple[int, ...]:
+        """Per-upload staleness s = versions the global advanced since the
+        client downloaded (0 for an upload trained on the live version)."""
+        return tuple(self.version - u.version for u in self.uploads)
+
+
+def dispatch_time(base: float, jitter: float, seed: int,
+                  client: int, dispatch: int) -> float:
+    """Duration of one client dispatch: the analytic base time with an
+    optional multiplicative lognormal jitter, seeded per
+    ``(seed, client, dispatch)`` so the draw is independent of event
+    interleaving (heap and reference simulators compute identical bits)."""
+    if jitter <= 0.0:
+        return float(base)
+    rng = np.random.default_rng([seed, client, dispatch])
+    return float(base) * float(np.exp(jitter * rng.standard_normal()))
+
+
+class VirtualClockScheduler:
+    """Event-driven async FL schedule over analytic client round times.
+
+    ``times[c]`` is client c's base round time (Eq. 1 ``T``). All clients
+    start at t=0 against version 0. ``next_window()`` pops the next
+    ``buffer_size`` uploads in ``(t, seq)`` order, advances the global
+    version, and restarts exactly the consumed clients at the aggregation
+    time against the new version — stragglers keep training against the
+    version they last downloaded and never block anyone.
+    """
+
+    def __init__(self, times: Sequence[float], buffer_size: int,
+                 seed: int = 0, jitter: float = 0.0):
+        times = [float(t) for t in times]
+        if not times:
+            raise ValueError("need at least one client")
+        if any(t <= 0.0 for t in times):
+            raise ValueError("client round times must be positive")
+        if not 1 <= buffer_size <= len(times):
+            raise ValueError(
+                f"buffer_size must be in [1, n_clients={len(times)}], "
+                f"got {buffer_size} (more uploads than clients in flight "
+                f"would never arrive)")
+        self.times = times
+        self.buffer_size = buffer_size
+        self.seed = seed
+        self.jitter = jitter
+        self.version = 0
+        self._seq = 0
+        self._dispatches = [0] * len(times)     # per-client dispatch count
+        self._heap: list[tuple[float, int, int, int]] = []  # (t, seq, c, v)
+        for c in range(len(times)):
+            self._dispatch(c, 0.0)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.times)
+
+    def _dispatch(self, client: int, start: float) -> None:
+        k = self._dispatches[client]
+        self._dispatches[client] += 1
+        t = start + dispatch_time(self.times[client], self.jitter,
+                                  self.seed, client, k)
+        heapq.heappush(self._heap, (t, self._seq, client, self.version))
+        self._seq += 1
+
+    def next_window(self) -> Window:
+        """Consume the next ``buffer_size`` uploads, advance the version,
+        restart the consumed clients at the aggregation time."""
+        uploads = tuple(
+            Upload(*heapq.heappop(self._heap))
+            for _ in range(self.buffer_size))
+        win = Window(t=uploads[-1].t, version=self.version, uploads=uploads)
+        self.version += 1
+        for u in uploads:
+            self._dispatch(u.client, win.t)
+        return win
+
+    def trace(self, n_windows: int) -> list[Window]:
+        """The next ``n_windows`` aggregation windows (advances state)."""
+        return [self.next_window() for _ in range(n_windows)]
+
+
+def schedule_census(times: Sequence[float], buffer_size: int,
+                    n_windows: int, seed: int = 0,
+                    jitter: float = 0.0) -> dict:
+    """Schedule-only statistics for a fleet — what ``launch/dryrun.py
+    --fl-async`` records: aggregation cadence and the staleness profile,
+    versus the synchronous-wait cadence of ``max(times)`` per round."""
+    if n_windows < 1:
+        raise ValueError(f"n_windows must be >= 1, got {n_windows}")
+    sched = VirtualClockScheduler(times, buffer_size, seed=seed,
+                                  jitter=jitter)
+    windows = sched.trace(n_windows)
+    stale = [s for w in windows for s in w.stalenesses]
+    hist: dict[int, int] = {}
+    for s in stale:
+        hist[s] = hist.get(s, 0) + 1
+    t_end = windows[-1].t
+    updates = n_windows * buffer_size
+    sync_round = max(sched.times)
+    return {
+        "n_clients": sched.n_clients,
+        "buffer_size": buffer_size,
+        "n_windows": n_windows,
+        "t_end_s": t_end,
+        "updates_per_s": updates / t_end,
+        "sync_updates_per_s": sched.n_clients / sync_round,
+        "staleness_mean": float(np.mean(stale)),
+        "staleness_max": int(max(stale)),
+        "staleness_hist": {str(k): v for k, v in sorted(hist.items())},
+    }

@@ -4,6 +4,8 @@ on the production meshes, record memory/cost/collective analysis.
   PYTHONPATH=src python -m repro.launch.dryrun                  # everything
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
       --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --fl-async \
+      --fl-clients 256 --fl-buffer 64      # async schedule census only
 
 Produces one JSON per (arch, shape, mesh) under experiments/dryrun/ —
 compile wall time, per-device HLO memory/FLOP/byte analysis, and the
@@ -213,6 +215,43 @@ def tokens_per_step(cfg, shape) -> int:
     return shape.global_batch * shape.seq_len
 
 
+def run_fl_async(out_dir: str, n_clients: int = 256, buffer_size: int = 64,
+                 windows: int = 200, jitter: float = 0.1) -> dict:
+    """Schedule-only dry-run of the async FL runtime (DESIGN.md §10):
+    simulate the virtual-clock event schedule for a heterogeneous fleet
+    without training, recording aggregation cadence and the staleness
+    histogram. This is the coherence proof before paying for a run — an
+    impossible buffer (deadlock) fails here, and the staleness profile
+    tells you whether the discount exponent has anything to do."""
+    from repro.configs.paper_mlp import config as mlp_config
+    from repro.core.compression import DEVICE_TIERS
+    from repro.core.heterogeneity import PROFILES, round_time
+    from repro.core.schedule import schedule_census
+    from repro.models import mlp
+
+    params = mlp.init(jax.random.PRNGKey(0), mlp_config())
+    plan_tiers = ("hub", "high", "mid", "low")
+    profiles = ("hub", "mid", "mid", "low")      # speed mix: hub/mid/low
+    times = [round_time(params, DEVICE_TIERS[plan_tiers[i % 4]],
+                        PROFILES[profiles[i % 4]], 16)["T"]
+             for i in range(n_clients)]
+    rec = schedule_census(times, buffer_size, windows, seed=0,
+                          jitter=jitter)
+    rec.update(kind="fl_async_schedule", jitter=jitter)
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir,
+                      f"fl_async__{n_clients}__buf{buffer_size}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"fl-async schedule census -> {fn}\n"
+          f"  updates/s: async={rec['updates_per_s']:.1f} "
+          f"sync-wait={rec['sync_updates_per_s']:.1f} "
+          f"({rec['updates_per_s'] / rec['sync_updates_per_s']:.1f}x)  "
+          f"staleness mean={rec['staleness_mean']:.2f} "
+          f"max={rec['staleness_max']}")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -220,7 +259,19 @@ def main() -> None:
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--fl-async", action="store_true",
+                    help="async FL schedule census only (DESIGN.md §10)")
+    ap.add_argument("--fl-clients", type=int, default=256)
+    ap.add_argument("--fl-buffer", type=int, default=64)
+    ap.add_argument("--fl-windows", type=int, default=200)
+    ap.add_argument("--fl-jitter", type=float, default=0.1)
     args = ap.parse_args()
+
+    if args.fl_async:
+        run_fl_async(args.out, n_clients=args.fl_clients,
+                     buffer_size=args.fl_buffer, windows=args.fl_windows,
+                     jitter=args.fl_jitter)
+        return
 
     archs = ARCHS if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]

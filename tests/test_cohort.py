@@ -148,6 +148,44 @@ def test_empty_round_leaves_params_untouched():
     assert _max_diff(p0, coh.params) == 0.0
 
 
+def test_all_dropped_round_is_bit_identical_noop_that_advances_step():
+    """A deadline below every tier's round time drops the whole fleet:
+    params AND opt_state must be bit-identical (no optimizer step ran on
+    a zero accumulator), the loss NaN, and the step counter still
+    advances — pins the empty-round path of CohortFLServer.round."""
+    times = _tier_times()
+    coh = CohortFLServer.from_clients(
+        _fleet(), model=MODEL, optimizer=optim.adam(0.1),
+        params=mlp.init(KEY, config()), straggler="drop",
+        deadline=min(times.values()) / 2)
+    p0 = jax.tree.map(np.asarray, coh.params)
+    s0 = jax.tree.map(np.asarray, coh.opt_state)
+    rec = coh.round()
+    assert rec["n_participants"] == 0
+    assert rec["n_dropped"] == len(FLEET)
+    assert np.isnan(rec["loss"])
+    assert rec["step"] == 1 and coh.step == 1       # clock still advances
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(coh.params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s0), jax.tree.leaves(coh.opt_state)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_seed_determinism_of_sampled_rounds():
+    """Same seed => identical history over sampled rounds; a different
+    seed samples different subsets and diverges."""
+    def hist(seed):
+        srv = CohortFLServer.from_clients(
+            _fleet(), model=MODEL, optimizer=optim.sgd(1.0),
+            params=mlp.init(KEY, config()), sample_fraction=0.5, seed=seed)
+        for _ in range(5):
+            srv.round()
+        return srv.history
+
+    assert hist(3) == hist(3)
+    assert hist(3) != hist(4)
+
+
 # ------------------------------------------- straggler / deadline
 
 def _tier_times():
@@ -190,6 +228,23 @@ def test_drop_requires_deadline():
 
 
 # --------------------------------- error feedback across rounds
+
+def test_ef_buffer_matches_param_dtype():
+    """Lazily-initialized cohort EF buffers must adopt the param leaf
+    dtype (they were hardcoded float32, breaking bf16 fleets)."""
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16),
+                          mlp.init(KEY, config()))
+    coh = CohortFLServer.from_clients(
+        _fleet(tiers=("mid", "low")), model=MODEL, optimizer=optim.sgd(1.0),
+        params=params, upload_quant="fp8_e4m3", error_feedback=True)
+    coh.round()
+    for c in coh.cohorts:
+        assert c.ef_buffer is not None
+        for p, e in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(c.ef_buffer)):
+            assert e.dtype == p.dtype == jnp.bfloat16
+            assert e.shape == (c.size,) + p.shape
+
 
 def test_ef_buffer_survives_non_participation():
     coh = CohortFLServer.from_clients(

@@ -118,3 +118,40 @@ def test_grad_aggregate_all_pruned_is_zero():
     m = jnp.zeros((3, 16))
     out = grad_aggregate(g, m, jnp.ones((3,)))
     assert bool(jnp.all(out == 0.0))
+
+
+@pytest.mark.parametrize("n", [999, 1500, 2049])
+def test_grad_aggregate_padded_tail(n):
+    """n % 1024 != 0 exercises ops.py's zero-pad + unpad path: the padded
+    tail (mask 0, den 0 -> output 0) must be sliced off exactly."""
+    ks = jax.random.split(KEY, 2)
+    g = jax.random.normal(ks[0], (3, n))
+    m = (jax.random.uniform(ks[1], (3, n)) > 0.4).astype(jnp.float32)
+    w = jnp.linspace(0.5, 2.0, 3)
+    out = grad_aggregate(g, m, w)
+    assert out.shape == (n,)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(grad_aggregate_ref(g, m, w)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape,mshape", [
+    ((4, 2048), (4, 1)),            # scalar per-tier mask (1-D param leaves)
+    ((4, 1500), (4, 1)),            # broadcast + padded tail combined
+    ((3, 37, 41), (3, 1, 1)),       # nd leaf, scalar mask, padded
+    ((2, 16, 64), (2, 16, 64)),     # nd leaf, full mask (flatten path)
+])
+def test_grad_aggregate_broadcast_mask(shape, mshape):
+    """m.size != g.size takes ops.py's broadcast branch (per-tier scalar
+    masks, the den shape zeros_like_acc gives ndim<2 leaves)."""
+    ks = jax.random.split(KEY, 2)
+    g = jax.random.normal(ks[0], shape)
+    m = (jax.random.uniform(ks[1], mshape) > 0.3).astype(jnp.float32)
+    w = jnp.linspace(0.5, 2.0, shape[0])
+    out = grad_aggregate(g, m, w)
+    assert out.shape == shape[1:]
+    t = shape[0]
+    mb = jnp.broadcast_to(m, shape).reshape(t, -1)
+    ref = grad_aggregate_ref(g.reshape(t, -1), mb, w).reshape(shape[1:])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
