@@ -2,14 +2,19 @@
 #   make test       - the full tier-1 suite (~7 min: kernel sweeps, model
 #                     smokes, convergence runs)
 #   make test-fast  - quick loop (<90 s): everything not marked `slow`
+#   make lint       - ruff, check-only (no autofix churn); rule set is
+#                     pinned in pyproject.toml [tool.ruff]
 PYTEST = PYTHONPATH=src python -m pytest -x -q
 
-.PHONY: test test-fast bench
+.PHONY: test test-fast lint bench
 test:
 	$(PYTEST)
 
 test-fast:
 	$(PYTEST) -m "not slow"
+
+lint:
+	ruff check src tests examples benchmarks
 
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py

@@ -1,10 +1,17 @@
 """Federated-round benches: the paper's Table-equivalent system numbers.
 
+Fleets and runtimes come from the declarative scenario API (DESIGN.md
+§11): every fleet is a ``FleetSpec`` and every server is assembled by
+``build_server`` — no bespoke fleet-construction loops.
+
 - fl/round_{mode}: wall time of one client-granular federated round on the
   paper MLP fleet (4 tiers), derived = final loss after 30 rounds.
 - fl/scale_{path}_{n}: clients-vs-wall-time scaling curve at n clients /
   4 plans — per-client loop vs. cohort-vectorized runtime (DESIGN.md §9),
   derived = per-round loss + (for the cohort rows) speedup over the loop.
+- fl/api_{path}_{n}: factory-built cohort server (``build_server``) vs
+  direct ``CohortFLServer`` construction at n clients — the scenario
+  layer must keep O(#plans) dispatches and within-noise round time.
 - fl/async_{path}_{n}: simulated (virtual-clock) time for the async
   staleness-aware runtime (DESIGN.md §10) to reach the sync-wait
   baseline's round-50 loss on the heterogeneous hub/mid/low 256-client /
@@ -16,7 +23,6 @@
 """
 from __future__ import annotations
 
-import functools
 import time
 import types
 
@@ -27,29 +33,40 @@ from repro.configs import get_smoke_config
 from repro.configs.paper_mlp import config as mlp_config
 from repro.core import TrainState, make_hetero_train_step
 from repro.core.compression import DEVICE_TIERS, default_tier_plans
-from repro.core.federated import (AsyncFLServer, Client, CohortFLServer,
-                                  FLServer)
+from repro.core.federated import CohortFLServer
 from repro.core.heterogeneity import PROFILES, round_time
-from repro.data import make_gaussian_dataset, partition_iid
+from repro.core.scenario import (AsyncBuffered, FleetSpec, FLScenario,
+                                 LocalTraining, build_server)
 from repro.models import get_model, mlp
 
 KEY = jax.random.PRNGKey(0)
 # one shared loss_fn identity so the per-plan jit caches in core.federated
 # are hit across all fl/* benches instead of recompiling per section
-MLP_MODEL = types.SimpleNamespace(loss_fn=functools.partial(mlp.loss_fn))
+MLP_MODEL = types.SimpleNamespace(loss_fn=mlp.loss_fn)
 
 SCALE_POPULATIONS = (32, 256)
 SCALE_TIERS = ("hub", "high", "mid", "low")     # 4 plans
 
 
-def _make_fleet(n: int, profiles: tuple = SCALE_TIERS) -> list[Client]:
-    """n clients over the 4 SCALE_TIERS plans on equal IID shards of 16
-    samples each, with ``profile_name`` cycling over ``profiles``."""
-    data = make_gaussian_dataset(KEY, n * 16)
-    shards = partition_iid(KEY, data, n)
-    return [Client(i, DEVICE_TIERS[SCALE_TIERS[i % len(SCALE_TIERS)]],
-                   shards[i], profile_name=profiles[i % len(profiles)])
-            for i in range(n)]
+def _fleet_spec(n: int, profiles: tuple = SCALE_TIERS) -> FleetSpec:
+    """n clients cycling over the 4 SCALE_TIERS plans on equal IID shards
+    of 16 samples each, with profiles cycling independently."""
+    return FleetSpec.cycling(SCALE_TIERS, n, profiles=profiles,
+                             samples_per_client=16)
+
+
+def _mlp_server(scenario: FLScenario, clients=None):
+    return build_server(scenario, MLP_MODEL, optim.sgd(1.0),
+                        mlp.init(KEY, mlp_config()), clients=clients)
+
+
+def _timed_rounds(srv, rounds: int):
+    """(per-round wall micros, last record) after a compile warm-up round."""
+    srv.round()                                  # compile
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        rec = srv.round()
+    return (time.perf_counter() - t0) / rounds * 1e6, rec
 
 
 def _scaling_rows(rounds: int = 3) -> list[tuple]:
@@ -60,29 +77,45 @@ def _scaling_rows(rounds: int = 3) -> list[tuple]:
     wall time is ~flat in the population while the loop's grows linearly.
     """
     rows = []
-    model = MLP_MODEL
-    cfg = mlp_config()
     for n in SCALE_POPULATIONS:
-        clients = _make_fleet(n)
+        clients = _fleet_spec(n).build_clients()
         times = {}
-        for path, mk in (
-                ("loop", lambda: FLServer(
-                    model=model, optimizer=optim.sgd(1.0), clients=clients,
-                    params=mlp.init(KEY, cfg))),
-                ("cohort", lambda: CohortFLServer.from_clients(
-                    clients, model=model, optimizer=optim.sgd(1.0),
-                    params=mlp.init(KEY, cfg)))):
-            srv = mk()
-            srv.round()                          # compile
-            t0 = time.perf_counter()
-            for _ in range(rounds):
-                rec = srv.round()
-            times[path] = (time.perf_counter() - t0) / rounds * 1e6
+        for path, runtime in (("loop", "client"), ("cohort", "cohort")):
+            srv = _mlp_server(FLScenario(fleet=_fleet_spec(n),
+                                         runtime=runtime), clients=clients)
+            times[path], rec = _timed_rounds(srv, rounds)
             derived = f"loss={rec['loss']:.4f}"
             if path == "cohort":
                 derived += f";speedup_vs_loop={times['loop'] / times['cohort']:.1f}x"
             rows.append((f"fl/scale_{path}_{n}", times[path], derived))
     return rows
+
+
+API_N = 256
+API_ROUNDS = 5
+
+
+def _api_overhead_rows() -> list[tuple]:
+    """The scenario layer must be free: a factory-built cohort server
+    keeps O(#plans) vmapped dispatches per round and within-noise round
+    time vs direct CohortFLServer construction at 256 clients."""
+    spec = _fleet_spec(API_N)
+    clients = spec.build_clients()
+    params = mlp.init(KEY, mlp_config())
+
+    direct = CohortFLServer.from_clients(
+        clients, model=MLP_MODEL, optimizer=optim.sgd(1.0), params=params)
+    us_direct, rec_d = _timed_rounds(direct, API_ROUNDS)
+
+    factory = build_server(FLScenario(fleet=spec), MLP_MODEL,
+                           optim.sgd(1.0), params, clients=clients)
+    us_api, rec_a = _timed_rounds(factory, API_ROUNDS)
+    return [
+        (f"fl/api_direct_{API_N}", us_direct, f"loss={rec_d['loss']:.4f}"),
+        (f"fl/api_factory_{API_N}", us_api,
+         f"loss={rec_a['loss']:.4f};vs_direct={us_direct / us_api:.2f}x;"
+         f"cohort_dispatches={len(factory.cohorts)}"),
+    ]
 
 
 ASYNC_N = 256
@@ -96,26 +129,22 @@ ASYNC_PROFILES = ("hub", "mid", "mid", "low")
 def _async_rows() -> list[tuple]:
     """Async vs sync-wait on the 256-client / 4-plan hub/mid/low fleet:
     virtual-clock seconds to reach the sync baseline's round-50 loss."""
-    clients = _make_fleet(ASYNC_N, profiles=ASYNC_PROFILES)
-    params = mlp.init(KEY, mlp_config())
+    spec = _fleet_spec(ASYNC_N, profiles=ASYNC_PROFILES)
+    clients = spec.build_clients()
     rows = []
 
-    sync = CohortFLServer.from_clients(
-        clients, model=MLP_MODEL, optimizer=optim.sgd(1.0), params=params,
-        straggler="wait")
-    sync.round()                                 # compile
-    t0 = time.perf_counter()
-    for _ in range(ASYNC_ROUNDS - 1):
-        rec = sync.round()
-    us = (time.perf_counter() - t0) / (ASYNC_ROUNDS - 1) * 1e6
+    sync = _mlp_server(FLScenario(fleet=spec), clients=clients)
+    us, rec = _timed_rounds(sync, ASYNC_ROUNDS - 1)
     target = rec["loss"]
     sim_sync = sum(r["round_wall_time"] for r in sync.history)
     rows.append((f"fl/async_syncwait_{ASYNC_N}", us,
                  f"loss_round50={target:.4f};sim_T={sim_sync:.3f}s"))
 
-    asy = AsyncFLServer.from_clients(
-        clients, model=MLP_MODEL, optimizer=optim.sgd(1.0), params=params,
-        buffer_size=ASYNC_BUFFER, staleness_exp=0.5)
+    asy = _mlp_server(
+        FLScenario(fleet=spec,
+                   timing=AsyncBuffered(buffer_size=ASYNC_BUFFER,
+                                        staleness_exp=0.5)),
+        clients=clients)
     asy.step()                                   # compile
     t0 = time.perf_counter()
     sim_async, n_win = None, 1
@@ -143,28 +172,20 @@ def _async_rows() -> list[tuple]:
 
 def run() -> list[tuple]:
     rows = []
-    cfg = mlp_config()
-    data = make_gaussian_dataset(KEY, 1600)
-    shards = partition_iid(KEY, data, 4)
-    model = MLP_MODEL
     tiers = ("hub", "high", "mid", "low")
 
     for mode in ("fedsgd", "fedavg"):
-        clients = [Client(i, DEVICE_TIERS[t], shards[i], profile_name=t)
-                   for i, t in enumerate(tiers)]
-        srv = FLServer(model=model, optimizer=optim.sgd(1.0), clients=clients,
-                       params=mlp.init(KEY, cfg), mode=mode, local_steps=5,
-                       local_lr=1.0)
-        srv.round()                      # compile
-        t0 = time.perf_counter()
-        for _ in range(30):
-            rec = srv.round()
-        us = (time.perf_counter() - t0) / 30 * 1e6
+        srv = _mlp_server(FLScenario(
+            fleet=FleetSpec(tiers=tiers, n_samples=1600),
+            local=LocalTraining(mode=mode, local_steps=5, local_lr=1.0),
+            runtime="client"))
+        us, rec = _timed_rounds(srv, 30)
         rows.append((f"fl/round_{mode}", us,
                      f"loss_after_30={rec['loss']:.4f};"
                      f"upload_bytes={rec['total_upload_bytes']:.0f}"))
 
     rows += _scaling_rows()
+    rows += _api_overhead_rows()
     rows += _async_rows()
 
     gcfg = get_smoke_config("granite-3-2b")

@@ -1,114 +1,92 @@
 """FL simulation — the paper's full system loop with an 8-device
-heterogeneous IoT fleet on non-IID data, comparing:
+heterogeneous IoT fleet, expressed as declarative ``FLScenario`` specs
+(DESIGN.md §11): each experiment is ONE frozen spec composed of policy
+objects (fleet x local training x upload x participation x timing), and
+``simulate()`` assembles + drives the right runtime. Compared here:
 
   1. uncompressed FedSGD (McMahan et al. baseline — all devices big enough)
   2. hetero-compressed FedSGD (our mask-aware aggregation)
   3. hetero-compressed FedAvg (5 local steps, compressed-space training)
+  4. fp8 upload quantization with error feedback
 
 and reporting the paper's Eq. (1) per-round wall time + upload bytes,
-then the cohort-vectorized runtime (DESIGN.md §9) on the same tier mix
-(equal IID shards, so cohort stacking truncates nothing) plus
-the at-scale scenarios it unlocks: partial participation, a straggler
-deadline that drops the MCU-class tier, and the third straggler policy —
-the asynchronous staleness-aware runtime (DESIGN.md §10), where buffered
+then the cohort-vectorized runtime (DESIGN.md §9) and the at-scale
+scenarios it unlocks — partial participation, a straggler deadline, and
+the asynchronous staleness-aware runtime (DESIGN.md §10) where buffered
 aggregation stops the slow tiers from gating the virtual clock.
 
   PYTHONPATH=src python examples/hetero_fl_sim.py
 """
-import functools
-import types
-
 import jax
 
-from repro import optim
-from repro.configs.paper_mlp import config
-from repro.core.compression import DEVICE_TIERS
-from repro.core.federated import (AsyncFLServer, Client, CohortFLServer,
-                                  FLServer)
-from repro.data import (make_gaussian_dataset, partition_dirichlet,
-                        partition_iid)
+from repro.fl import (AsyncBuffered, FleetSpec, FLScenario, LocalTraining,
+                      ParticipationPolicy, SyncDrop, UploadPolicy, simulate)
 from repro.models import mlp
+from repro.data import make_gaussian_dataset
 
 ROUNDS = 60
-FLEET = ["hub", "high", "high", "mid", "mid", "low", "low", "embedded"]
+FLEET = ("hub", "high", "high", "mid", "mid", "low", "low", "embedded")
 
-key = jax.random.PRNGKey(0)
-cfg = config()
-data = make_gaussian_dataset(key, 4000)
-shards = partition_dirichlet(key, data, len(FLEET), alpha=0.5)
-val = make_gaussian_dataset(jax.random.PRNGKey(9), 1000)
-model = types.SimpleNamespace(loss_fn=functools.partial(mlp.loss_fn))
-
-
-def fleet(tiers, shard_list=None):
-    return [Client(i, DEVICE_TIERS[t], (shard_list or shards)[i],
-                   profile_name=t)
-            for i, t in enumerate(tiers)]
+# non-IID (label-skew Dirichlet) split for the faithful per-client loop;
+# the cohort/async runtimes stack each cohort's shards for vmap and
+# truncate ragged shards to the common floor, so they use equal IID
+# shards to keep every sample in play
+NONIID = FleetSpec(tiers=FLEET, n_samples=4000, partition="dirichlet",
+                   alpha=0.5)
+IID = FleetSpec(tiers=FLEET, n_samples=4000)
+VAL = make_gaussian_dataset(jax.random.PRNGKey(9), 1000)
 
 
-def run(name, tiers, mode, **kw):
-    srv = FLServer(model=model, optimizer=optim.sgd(1.0),
-                   clients=fleet(tiers), params=mlp.init(key, cfg),
-                   mode=mode, **kw)
-    for _ in range(ROUNDS):
-        rec = srv.round()
-    acc = float(mlp.accuracy(srv.params, val["x"], val["y"]))
-    print(f"{name:28s} loss={rec['loss']:.4f} val_acc={acc:.3f} "
-          f"round_wall={rec['round_wall_time']:.3f}s "
-          f"upload={rec['total_upload_bytes'] / 1e3:.1f}kB")
+def run(name, scenario):
+    """One declarative experiment: simulate() builds the runtime the
+    scenario's policies call for (per-client loop, cohort, or async)."""
+    res = simulate(scenario, ROUNDS)
+    rec = res.final
+    acc = float(mlp.accuracy(res.params, VAL["x"], VAL["y"]))
+    extra = (f"virtual_t={rec.t:.3f}s "
+             f"staleness={rec.staleness_mean:.1f}/{rec.staleness_max}"
+             if rec.t is not None else
+             f"round_wall={rec.round_wall_time:.3f}s "
+             + (f"participants={rec.n_participants}/{scenario.fleet.n_clients} "
+                f"dropped={rec.n_dropped}"
+                if rec.n_participants is not None else
+                f"upload={rec.total_upload_bytes / 1e3:.1f}kB"))
+    print(f"{name:28s} loss={rec.loss:.4f} val_acc={acc:.3f} {extra}")
     return acc
 
 
-# the cohort runtime stacks each cohort's shards for vmap, truncating
-# ragged shards to the common floor — so this section uses equal-size IID
-# shards (not the Dirichlet split above) to keep every sample in play
-iid_shards = partition_iid(key, data, len(FLEET))
-
-
-def run_cohort(name, mode="fedsgd", **kw):
-    srv = CohortFLServer.from_clients(
-        fleet(FLEET, iid_shards), model=model, optimizer=optim.sgd(1.0),
-        params=mlp.init(key, cfg), mode=mode, **kw)
-    for _ in range(ROUNDS):
-        rec = srv.round()
-    acc = float(mlp.accuracy(srv.params, val["x"], val["y"]))
-    print(f"{name:28s} loss={rec['loss']:.4f} val_acc={acc:.3f} "
-          f"round_wall={rec['round_wall_time']:.3f}s "
-          f"participants={rec['n_participants']}/{srv.n_clients} "
-          f"dropped={rec['n_dropped']}")
-    return acc
-
-
-print(f"fleet: {FLEET}\n")
-run("fedsgd (all-hub baseline)", ["hub"] * len(FLEET), "fedsgd")
-run("fedsgd hetero-compressed", FLEET, "fedsgd")
-run("fedavg hetero-compressed", FLEET, "fedavg", local_steps=5, local_lr=1.0)
-run("fedsgd hetero + fp8 upload+EF", FLEET, "fedsgd",
-    upload_quant="fp8_e4m3", error_feedback=True)
+print(f"fleet: {list(FLEET)}\n")
+run("fedsgd (all-hub baseline)",
+    FLScenario(fleet=FleetSpec(tiers=("hub",) * len(FLEET), n_samples=4000,
+                               partition="dirichlet"),
+               runtime="client"))
+run("fedsgd hetero-compressed", FLScenario(fleet=NONIID, runtime="client"))
+run("fedavg hetero-compressed",
+    FLScenario(fleet=NONIID, runtime="client",
+               local=LocalTraining(mode="fedavg", local_steps=5,
+                                   local_lr=1.0)))
+run("fedsgd hetero + fp8 upload+EF",
+    FLScenario(fleet=NONIID, runtime="client",
+               upload=UploadPolicy(quant="fp8_e4m3", error_feedback=True)))
 print("\nnote: the compressed fleet trains the SAME global model while the "
       "low tiers ship 4-25x smaller payloads (the paper's Eq. 1 win).")
 
-def run_async(name, **kw):
-    srv = AsyncFLServer.from_clients(
-        fleet(FLEET, iid_shards), model=model, optimizer=optim.sgd(1.0),
-        params=mlp.init(key, cfg), **kw)
-    for _ in range(ROUNDS):
-        rec = srv.step()
-    acc = float(mlp.accuracy(srv.params, val["x"], val["y"]))
-    print(f"{name:28s} loss={rec['loss']:.4f} val_acc={acc:.3f} "
-          f"virtual_t={rec['t']:.3f}s "
-          f"staleness={rec['staleness_mean']:.1f}/{rec['staleness_max']}")
-    return acc
-
-
 print("\ncohort-vectorized runtime (one vmapped dispatch per plan, "
       "DESIGN.md §9):")
-run_cohort("cohort fedsgd (IID shards)")
-run_cohort("cohort + 50% participation", sample_fraction=0.5, seed=1)
-run_cohort("cohort + 5ms deadline drop", straggler="drop", deadline=0.005)
+run("cohort fedsgd (IID shards)", FLScenario(fleet=IID))
+run("cohort + 50% participation",
+    FLScenario(fleet=IID, participation=ParticipationPolicy(fraction=0.5,
+                                                            seed=1)))
+run("cohort + 5ms deadline drop",
+    FLScenario(fleet=IID, timing=SyncDrop(deadline=0.005)))
 
 print("\nasync staleness-aware runtime (virtual clock + buffered "
       "aggregation, DESIGN.md §10):")
-run_async("async buffer=4, a=0.5", buffer_size=4, staleness_exp=0.5)
-run_async("async buffer=2 + jitter", buffer_size=2, staleness_exp=0.5,
-          time_jitter=0.2, seed=1)
+run("async buffer=4, a=0.5",
+    FLScenario(fleet=IID, timing=AsyncBuffered(buffer_size=4,
+                                               staleness_exp=0.5)))
+run("async buffer=2 + jitter",
+    FLScenario(fleet=IID,
+               timing=AsyncBuffered(buffer_size=2, staleness_exp=0.5,
+                                    time_jitter=0.2),
+               participation=ParticipationPolicy(seed=1)))

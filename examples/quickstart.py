@@ -1,37 +1,27 @@
-"""Quickstart: heterogeneous-device federated learning in ~40 lines.
+"""Quickstart: heterogeneous-device federated learning in ~20 lines.
 
-Four device tiers (server hub -> fp8 edge -> pruned+bf16 -> pruned+fp8)
-jointly train ONE global language model; each tier trains its own
-compressed variant and the mask-aware aggregator merges their gradients.
+One declarative ``FLScenario`` (DESIGN.md §11) describes the whole
+experiment — a six-device IoT fleet (server hub -> fp8 edge -> pruned
+tiers -> MCU-class) jointly training ONE global model, each tier on its
+own compressed variant, merged by the mask-aware aggregator — and
+``simulate()`` assembles the cohort-vectorized runtime and runs it.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
+from repro.fl import FleetSpec, FLScenario, LocalTraining, simulate
 
-from repro import optim
-from repro.configs import get_smoke_config
-from repro.core import TrainState, make_hetero_train_step
-from repro.core.compression import default_tier_plans
-from repro.data.synthetic import TokenStream
-from repro.models import get_model
+scenario = FLScenario(
+    fleet=FleetSpec(tiers=("hub", "high", "mid", "mid", "low", "embedded"),
+                    n_samples=1800),
+    local=LocalTraining(mode="fedavg", local_steps=5, local_lr=1.0),
+)
+print("tiers:", {t: c for (t, _), c in scenario.fleet.counts().items()})
 
-N_TIERS = 4
+result = simulate(scenario, rounds=30)      # paper MLP task by default
 
-cfg = get_smoke_config("granite-3-2b")      # 2-layer GQA transformer (CPU)
-model = get_model(cfg)
-opt = optim.adamw(1e-3)
-plans = default_tier_plans(N_TIERS)
-print("tiers:", [(p.name, f"density={p.density}", f"quant={p.quant}")
-                 for p in plans])
-
-step = jax.jit(make_hetero_train_step(model, opt, plans))
-state = TrainState.create(model, opt, jax.random.PRNGKey(0))
-stream = TokenStream(cfg.vocab_size, batch=N_TIERS * 4, seq_len=64)
-
-for i, batch in zip(range(30), stream):
-    tiered = {"tokens": batch["tokens"].reshape(N_TIERS, 4, -1)}
-    state, metrics = step(state, tiered)
-    if (i + 1) % 5 == 0:
-        print(f"round {i + 1:3d}  global-model loss {float(metrics['loss']):.4f}")
-
-print("done — one global model trained from 4 differently-compressed locals")
+for rec in result.records[4::5]:
+    print(f"round {rec.step:3d}  global-model loss {rec.loss:.4f}  "
+          f"round_wall {rec.round_wall_time * 1e3:.2f}ms")
+print(f"done — one global model from 6 differently-compressed devices; "
+      f"simulated {result.sim_time:.2f}s of fleet time, "
+      f"{sum(r.total_upload_bytes for r in result.records) / 1e3:.0f}kB uploaded")

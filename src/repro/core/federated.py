@@ -117,17 +117,21 @@ def _client_local_train_fn(loss_fn: Callable, plan: CompressionPlan,
     return jax.jit(f)
 
 
-def _maybe_quantize_upload(grads, fmt: str | None, ef_buffer):
-    """Gradient-upload quantization + error feedback. Returns
-    (uploaded_grads, new_ef_buffer, bits_per_value)."""
+def _maybe_quantize_upload(grads, fmt: str | None, ef_buffer, params):
+    """Gradient-upload quantization + error feedback. Residuals live in
+    the PARAM leaf dtype (same contract as the cohort path's stacked
+    buffers, `_init_cohort_ef`): grads normally share it, but a dtype
+    promoted anywhere upstream must not drag the buffer with it across
+    rounds. Returns (uploaded_grads, new_ef_buffer, bits_per_value)."""
     if fmt is None:
         return grads, ef_buffer, 32
     f = FORMATS[fmt]
     if ef_buffer is None:
-        ef_buffer = jax.tree.map(jnp.zeros_like, grads)
+        ef_buffer = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
     corrected = jax.tree.map(lambda g, e: g + e, grads, ef_buffer)
     q = jax.tree.map(lambda g: fake_quant_ste(g, f.e_bits, f.m_bits), corrected)
-    new_ef = jax.tree.map(lambda c, q: c - q, corrected, q)
+    new_ef = jax.tree.map(lambda c, q, e: (c - q).astype(e.dtype),
+                          corrected, q, ef_buffer)
     return q, new_ef, f.bits
 
 
@@ -168,7 +172,7 @@ class FLServer:
                         self.params, batch)
             g, new_ef, bits = _maybe_quantize_upload(
                 g, self.upload_quant,
-                c.ef_buffer if self.error_feedback else None)
+                c.ef_buffer if self.error_feedback else None, self.params)
             if self.error_feedback:
                 c.ef_buffer = new_ef
             grads_list.append(g)
@@ -249,7 +253,9 @@ def _upload_and_sum(updates, part, ef, fmt: str | None):
 
         def upd_ef(e, c, qq):
             keep = part.reshape((-1,) + (1,) * (c.ndim - 1)) > 0
-            return jnp.where(keep, c - qq, e)
+            # pin the residual to its buffer dtype: a promotion in c - qq
+            # must not widen the stacked buffer between rounds
+            return jnp.where(keep, c - qq, e).astype(e.dtype)
 
         ef = jax.tree.map(upd_ef, ef, corrected, q)
         updates = q

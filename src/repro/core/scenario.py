@@ -1,0 +1,563 @@
+"""Declarative scenario API (DESIGN.md §11): one frozen ``FLScenario``
+spec assembled from small policy objects, replacing the three-server
+kwarg sprawl (``FLServer`` / ``CohortFLServer`` / ``AsyncFLServer`` each
+re-exposing ~15 overlapping flat kwargs plus copy-pasted fleet loops).
+
+The paper frames heterogeneous FL as a grid of orthogonal axes — fleet
+composition x local training x upload compression x participation x
+timing. Each axis is one policy object here:
+
+  - :class:`FleetSpec`          who trains: tier -> plan/profile/data shard
+  - :class:`LocalTraining`      how a client trains: fedsgd/fedavg, steps, lr
+  - :class:`UploadPolicy`       what goes upstream: quant format + error feedback
+  - :class:`ParticipationPolicy` who shows up each round: fraction + seed
+  - :class:`TimingPolicy`       when the server aggregates:
+                                ``SyncWait | SyncDrop | AsyncBuffered``
+
+``FLScenario`` composes them and is frozen, hashable, and serializable
+(``to_dict``/``from_dict`` round-trip, JSON-safe). The runtimes in
+``core/federated.py`` stay as the internal execution layer:
+:func:`build_server` selects and assembles the right one, and
+:func:`simulate` is the unified driver returning a :class:`RunResult`
+of typed :class:`RoundRecord`\\ s in place of the three divergent
+untyped ``history`` dicts. Every legacy kwarg combination maps to a
+scenario producing a bit-identical trajectory (property-tested in
+``tests/test_scenario.py``).
+
+:func:`scenario_census` evaluates a scenario's fleet, payload bytes and
+Eq. (1) time table on ``jax.eval_shape`` stand-ins — no accelerator is
+touched, so ``launch/dryrun.py --fl-census`` can vet a scenario before
+paying for a run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, ClassVar
+
+from repro.core.compression import DEVICE_TIERS
+from repro.core.heterogeneity import PROFILES, round_time
+from repro.numerics import FORMATS
+
+__all__ = [
+    "FleetSpec", "LocalTraining", "UploadPolicy", "ParticipationPolicy",
+    "TimingPolicy", "SyncWait", "SyncDrop", "AsyncBuffered",
+    "FLScenario", "RoundRecord", "RunResult",
+    "build_server", "simulate", "scenario_census", "timing_from_dict",
+]
+
+
+def _fields_dict(obj) -> dict:
+    """Shallow dataclass -> dict with tuples downgraded to JSON lists."""
+    out = {}
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        out[f.name] = list(v) if isinstance(v, tuple) else v
+    return out
+
+
+# --------------------------------------------------------------- fleet
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """Who trains: one device tier per client (plan + Eq. (1) profile)
+    plus the data partition that feeds them.
+
+    ``tiers[i]`` names client ``i``'s :data:`DEVICE_TIERS` compression
+    plan; ``profiles[i]`` (default: ``tiers``) names its
+    :data:`PROFILES` speed class, so a slow radio can run a big plan and
+    vice versa. Data is the paper's synthetic Gaussian task, split
+    ``"iid"`` or label-skew ``"dirichlet"`` — deterministic in
+    ``data_seed``, so two builds of the same spec see bit-identical
+    shards.
+    """
+    tiers: tuple[str, ...]
+    profiles: tuple[str, ...] | None = None
+    n_samples: int = 0              # total dataset size; validated at build
+    partition: str = "iid"          # iid | dirichlet
+    alpha: float = 0.5              # dirichlet concentration
+    data_seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "tiers", tuple(self.tiers))
+        if self.profiles is not None:
+            object.__setattr__(self, "profiles", tuple(self.profiles))
+        if not self.tiers:
+            raise ValueError("FleetSpec needs at least one client tier")
+        for t in self.tiers:
+            if t not in DEVICE_TIERS:
+                raise ValueError(f"unknown tier {t!r}; known: {sorted(DEVICE_TIERS)}")
+        for p in self.profiles or ():
+            if p not in PROFILES:
+                raise ValueError(f"unknown profile {p!r}; known: {sorted(PROFILES)}")
+        if self.profiles is not None and len(self.profiles) != len(self.tiers):
+            raise ValueError("profiles must match tiers length")
+        if self.partition not in ("iid", "dirichlet"):
+            raise ValueError(f"partition must be iid|dirichlet, got {self.partition!r}")
+
+    @classmethod
+    def cycling(cls, tiers, n_clients: int, *, profiles=None,
+                samples_per_client: int = 16, **kw) -> "FleetSpec":
+        """The benchmark fleets' shape: ``n_clients`` cycling over a short
+        tier (and optionally profile) pattern, equal IID-able shards."""
+        t = tuple(tiers[i % len(tiers)] for i in range(n_clients))
+        p = (None if profiles is None else
+             tuple(profiles[i % len(profiles)] for i in range(n_clients)))
+        return cls(tiers=t, profiles=p,
+                   n_samples=n_clients * samples_per_client, **kw)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.tiers)
+
+    @property
+    def client_profiles(self) -> tuple[str, ...]:
+        return self.profiles if self.profiles is not None else self.tiers
+
+    def shard_sizes(self) -> list[int]:
+        """Per-client shard lengths under ``partition="iid"`` (the
+        ``np.array_split`` convention) — host arithmetic only."""
+        n, c = self.n_samples, self.n_clients
+        return [n // c + (1 if i < n % c else 0) for i in range(c)]
+
+    def counts(self) -> dict[tuple[str, str], int]:
+        """(tier, profile) -> client count, in first-appearance order."""
+        out: dict[tuple[str, str], int] = {}
+        for t, p in zip(self.tiers, self.client_profiles):
+            out[(t, p)] = out.get((t, p), 0) + 1
+        return out
+
+    def build_clients(self, shards: list[dict] | None = None) -> list:
+        """Materialize the fleet: partition the dataset (or the provided
+        ``shards``) and attach plan + profile per client."""
+        import jax
+
+        from repro.core.federated import Client
+        from repro.data import (make_gaussian_dataset, partition_dirichlet,
+                                partition_iid)
+        if shards is None:
+            if self.n_samples < self.n_clients:
+                raise ValueError(
+                    f"n_samples={self.n_samples} cannot cover "
+                    f"{self.n_clients} clients")
+            key = jax.random.PRNGKey(self.data_seed)
+            data = make_gaussian_dataset(key, self.n_samples)
+            if self.partition == "iid":
+                shards = partition_iid(key, data, self.n_clients)
+            else:
+                shards = partition_dirichlet(key, data, self.n_clients,
+                                             alpha=self.alpha)
+        elif len(shards) != self.n_clients:
+            raise ValueError(f"{len(shards)} shards for {self.n_clients} clients")
+        return [Client(i, DEVICE_TIERS[t], shards[i], profile_name=p)
+                for i, (t, p) in enumerate(zip(self.tiers,
+                                               self.client_profiles))]
+
+    def to_dict(self) -> dict:
+        return _fields_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FleetSpec":
+        d = dict(d)
+        d["tiers"] = tuple(d["tiers"])
+        if d.get("profiles") is not None:
+            d["profiles"] = tuple(d["profiles"])
+        return cls(**d)
+
+
+# ------------------------------------------------------------- policies
+
+@dataclass(frozen=True)
+class LocalTraining:
+    """How a sampled client trains: the paper's §4.2 axis."""
+    mode: str = "fedsgd"            # fedsgd | fedavg
+    local_steps: int = 5            # fedavg steps per round
+    local_lr: float = 0.1           # fedavg on-device lr
+    server_lr: float = 1.0          # fedavg server-side delta scale
+
+    def __post_init__(self):
+        if self.mode not in ("fedsgd", "fedavg"):
+            raise ValueError(f"mode must be fedsgd|fedavg, got {self.mode!r}")
+        if self.local_steps < 1:
+            raise ValueError("local_steps must be >= 1")
+
+    def to_dict(self) -> dict:
+        return _fields_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LocalTraining":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class UploadPolicy:
+    """What goes upstream: optional gradient/delta quantization with
+    per-client error feedback (beyond-paper, off by default)."""
+    quant: str | None = None        # a repro.numerics FORMATS name
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        if self.quant is not None and self.quant not in FORMATS:
+            raise ValueError(f"unknown quant format {self.quant!r}; "
+                             f"known: {sorted(FORMATS)}")
+        if self.error_feedback and self.quant is None:
+            raise ValueError("error_feedback without quant has nothing to feed back")
+
+    def to_dict(self) -> dict:
+        return _fields_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "UploadPolicy":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class ParticipationPolicy:
+    """Who shows up: per-round uniform sampling without replacement.
+    ``seed`` is the scenario's single stochastic seed — it also drives
+    the async runtime's dispatch-time jitter."""
+    fraction: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
+
+    def to_dict(self) -> dict:
+        return _fields_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ParticipationPolicy":
+        return cls(**d)
+
+
+class TimingPolicy:
+    """When the server aggregates. Concrete policies: :class:`SyncWait`
+    (block on the slowest sampled client, paper Eq. (1) semantics),
+    :class:`SyncDrop` (discard clients past a deadline), and
+    :class:`AsyncBuffered` (FedBuff-shaped buffered windows on the
+    virtual clock with polynomial staleness discount, DESIGN.md §10)."""
+    kind: ClassVar[str] = ""
+    _KINDS: ClassVar[dict[str, type]] = {}
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        if cls.kind:
+            TimingPolicy._KINDS[cls.kind] = cls
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, **_fields_dict(self)}
+
+
+def timing_from_dict(d: dict) -> TimingPolicy:
+    d = dict(d)
+    kind = d.pop("kind")
+    try:
+        cls = TimingPolicy._KINDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown timing kind {kind!r}; "
+                         f"known: {sorted(TimingPolicy._KINDS)}") from None
+    return cls(**d)
+
+
+@dataclass(frozen=True)
+class SyncWait(TimingPolicy):
+    kind: ClassVar[str] = "sync_wait"
+
+
+@dataclass(frozen=True)
+class SyncDrop(TimingPolicy):
+    deadline: float = 1.0           # seconds of analytic Eq. (1) time
+
+    kind: ClassVar[str] = "sync_drop"
+
+    def __post_init__(self):
+        if self.deadline <= 0:
+            raise ValueError("deadline must be > 0 seconds")
+
+
+@dataclass(frozen=True)
+class AsyncBuffered(TimingPolicy):
+    buffer_size: int = 1            # uploads per aggregation (K of FedBuff)
+    staleness_exp: float = 0.5      # a in (1+s)^-a; 0 turns the discount off
+    time_jitter: float = 0.0        # lognormal sigma on per-dispatch times
+
+    kind: ClassVar[str] = "async_buffered"
+
+    def __post_init__(self):
+        if self.buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        if self.staleness_exp < 0:
+            raise ValueError("staleness_exp must be >= 0")
+        if self.time_jitter < 0:
+            raise ValueError("time_jitter must be >= 0")
+
+
+# ------------------------------------------------------------- scenario
+
+@dataclass(frozen=True)
+class FLScenario:
+    """One experiment in the design space: fleet x local x upload x
+    participation x timing, plus which execution substrate runs it
+    (``"cohort"``: vmapped per-plan fast path; ``"client"``: the faithful
+    per-client loop, instrumentation-friendly but O(#clients) dispatches).
+    """
+    fleet: FleetSpec
+    local: LocalTraining = LocalTraining()
+    upload: UploadPolicy = UploadPolicy()
+    participation: ParticipationPolicy = ParticipationPolicy()
+    timing: TimingPolicy = SyncWait()
+    runtime: str = "cohort"         # cohort | client
+
+    def __post_init__(self):
+        if self.runtime not in ("cohort", "client"):
+            raise ValueError(f"runtime must be cohort|client, got {self.runtime!r}")
+        if self.runtime == "client":
+            if not isinstance(self.timing, SyncWait):
+                raise ValueError("the per-client runtime only supports "
+                                 "SyncWait timing (no deadline/async path)")
+            if self.participation.fraction < 1.0:
+                raise ValueError("the per-client runtime has no participation "
+                                 "sampling; use runtime='cohort'")
+        if (isinstance(self.timing, AsyncBuffered)
+                and self.participation.fraction < 1.0):
+            raise ValueError("AsyncBuffered schedules every client on the "
+                             "virtual clock; partial participation is a "
+                             "sync-only knob")
+
+    def to_dict(self) -> dict:
+        return {"fleet": self.fleet.to_dict(),
+                "local": self.local.to_dict(),
+                "upload": self.upload.to_dict(),
+                "participation": self.participation.to_dict(),
+                "timing": self.timing.to_dict(),
+                "runtime": self.runtime}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FLScenario":
+        return cls(fleet=FleetSpec.from_dict(d["fleet"]),
+                   local=LocalTraining.from_dict(d["local"]),
+                   upload=UploadPolicy.from_dict(d["upload"]),
+                   participation=ParticipationPolicy.from_dict(
+                       d["participation"]),
+                   timing=timing_from_dict(d["timing"]),
+                   runtime=d.get("runtime", "cohort"))
+
+
+# ------------------------------------------------------- typed records
+
+@dataclass(frozen=True)
+class RoundRecord:
+    """One round (sync) or aggregation window (async), typed. Fields a
+    runtime does not produce stay ``None`` — replaces the three divergent
+    untyped ``history`` dicts."""
+    step: int
+    loss: float
+    round_wall_time: float | None = None    # sync: Eq. (1) round wall-clock
+    t: float | None = None                  # async: virtual-clock timestamp
+    total_upload_bytes: float = 0.0
+    n_participants: int | None = None
+    n_dropped: int | None = None
+    client_losses: tuple[float, ...] | None = None
+    n_updates: int | None = None            # async: uploads in the window
+    staleness_mean: float | None = None
+    staleness_max: int | None = None
+    n_versions_live: int | None = None
+
+    @classmethod
+    def from_history(cls, rec: dict) -> "RoundRecord":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in rec.items() if k in known}
+        if kw.get("client_losses") is not None:
+            kw["client_losses"] = tuple(kw["client_losses"])
+        return cls(**kw)
+
+
+@dataclass
+class RunResult:
+    """What :func:`simulate` returns: the scenario, its typed round
+    records, the final model, and (non-serialized) the live runtime for
+    further stepping or inspection."""
+    scenario: FLScenario
+    records: tuple[RoundRecord, ...]
+    params: Any
+    opt_state: Any
+    server: Any
+
+    @property
+    def final(self) -> RoundRecord:
+        return self.records[-1]
+
+    @property
+    def losses(self) -> tuple[float, ...]:
+        return tuple(r.loss for r in self.records)
+
+    @property
+    def sim_time(self) -> float:
+        """Simulated seconds consumed: the async virtual clock, or the
+        sum of per-round Eq. (1) wall times."""
+        if isinstance(self.scenario.timing, AsyncBuffered):
+            return float(self.final.t)
+        return sum(r.round_wall_time for r in self.records)
+
+    def summary(self) -> dict:
+        return {"rounds": len(self.records), "loss": self.final.loss,
+                "sim_time_s": self.sim_time,
+                "total_upload_bytes": sum(r.total_upload_bytes
+                                          for r in self.records)}
+
+
+# ------------------------------------------------------------- factory
+
+def build_server(scenario: FLScenario, model, optimizer, params, *,
+                 clients: list | None = None, shards: list | None = None):
+    """Assemble the runtime a scenario calls for. ``clients``/``shards``
+    override the fleet's data build (tests pin exact shards this way);
+    the kwargs handed to the legacy constructors are exactly the
+    DESIGN.md §11 mapping table, so trajectories are bit-identical to
+    direct construction."""
+    from repro.core.federated import (AsyncFLServer, CohortFLServer,
+                                      FLServer)
+    if clients is None:
+        clients = scenario.fleet.build_clients(shards)
+    common = dict(model=model, optimizer=optimizer, params=params,
+                  mode=scenario.local.mode,
+                  local_steps=scenario.local.local_steps,
+                  local_lr=scenario.local.local_lr,
+                  server_lr=scenario.local.server_lr,
+                  upload_quant=scenario.upload.quant,
+                  error_feedback=scenario.upload.error_feedback)
+    timing = scenario.timing
+    if scenario.runtime == "client":
+        return FLServer(clients=clients, **common)
+    if isinstance(timing, AsyncBuffered):
+        return AsyncFLServer.from_clients(
+            clients, buffer_size=timing.buffer_size,
+            staleness_exp=timing.staleness_exp,
+            time_jitter=timing.time_jitter,
+            seed=scenario.participation.seed, **common)
+    if isinstance(timing, SyncDrop):
+        return CohortFLServer.from_clients(
+            clients, straggler="drop", deadline=timing.deadline,
+            sample_fraction=scenario.participation.fraction,
+            seed=scenario.participation.seed, **common)
+    if isinstance(timing, SyncWait):
+        return CohortFLServer.from_clients(
+            clients, straggler="wait",
+            sample_fraction=scenario.participation.fraction,
+            seed=scenario.participation.seed, **common)
+    raise TypeError(f"unknown timing policy {type(timing).__name__}")
+
+
+def _default_bundle(model, optimizer, params, init_seed: int):
+    """Fill unspecified (model, optimizer, params) with the paper's MLP
+    task: module-identity loss_fn + SGD(1.0) + seeded init. Stable
+    identities keep the per-plan jit caches warm across simulate calls."""
+    import types
+
+    import jax
+
+    from repro import optim
+    from repro.configs.paper_mlp import config as mlp_config
+    from repro.models import mlp
+    if model is None:
+        model = types.SimpleNamespace(loss_fn=mlp.loss_fn)
+    if optimizer is None:
+        optimizer = optim.sgd(1.0)
+    if params is None:
+        params = mlp.init(jax.random.PRNGKey(init_seed), mlp_config())
+    return model, optimizer, params
+
+
+def simulate(scenario: FLScenario, rounds: int, *, model=None,
+             optimizer=None, params=None, clients: list | None = None,
+             shards: list | None = None, init_seed: int = 0) -> RunResult:
+    """The unified driver: build the scenario's runtime and advance it
+    ``rounds`` federated rounds (sync) or aggregation windows (async).
+    With no model/optimizer/params it runs the paper's MLP task."""
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    model, optimizer, params = _default_bundle(model, optimizer, params,
+                                               init_seed)
+    srv = build_server(scenario, model, optimizer, params,
+                       clients=clients, shards=shards)
+    advance = srv.step if isinstance(scenario.timing, AsyncBuffered) else srv.round
+    for _ in range(rounds):
+        advance()
+    return RunResult(scenario=scenario,
+                     records=tuple(RoundRecord.from_history(h)
+                                   for h in srv.history),
+                     params=srv.params, opt_state=srv.opt_state, server=srv)
+
+
+# -------------------------------------------------------------- census
+
+def scenario_census(scenario: FLScenario, params=None) -> dict:
+    """A scenario's fleet, payload bytes, and Eq. (1) time table —
+    evaluated on ``jax.eval_shape`` abstract params, so it never touches
+    the accelerator (`launch/dryrun.py --fl-census`).
+
+    Per (tier, profile) group: client count, per-round payload bytes and
+    the Eq. (1) component breakdown at the group's largest shard.
+    Totals apply the timing policy: SyncDrop reports who the deadline
+    drops; AsyncBuffered reports the buffer shape instead of a round
+    wall-clock (the virtual clock owns time there). With partial
+    participation, ``total_upload_bytes_per_round`` is the EXPECTED
+    per-round value under uniform sampling and ``round_wall_time`` the
+    worst case over the whole fleet (``n_participants_per_round`` names
+    the sampled count). Shard sizes are exact for ``partition="iid"``;
+    dirichlet sizes depend on the label draw, so the table assumes the
+    even split and sets ``shard_sizes_exact=False``.
+    """
+    import jax
+
+    from repro.configs.paper_mlp import config as mlp_config
+    from repro.models import mlp
+    if params is None:
+        cfg = mlp_config()
+        params = jax.eval_shape(lambda key: mlp.init(key, cfg),
+                                jax.random.PRNGKey(0))
+    spec = scenario.fleet
+    local_steps = (scenario.local.local_steps
+                   if scenario.local.mode == "fedavg" else 1)
+    sizes = spec.shard_sizes()
+    per_group: dict[tuple[str, str], dict] = {}
+    per_client_T: list[float] = []
+    total_bytes = 0.0
+    for i, (tier, prof) in enumerate(zip(spec.tiers, spec.client_profiles)):
+        t = round_time(params, DEVICE_TIERS[tier], PROFILES[prof], sizes[i],
+                       local_steps)
+        per_client_T.append(t["T"])
+        total_bytes += t["payload_bytes"]
+        g = per_group.setdefault((tier, prof), {"count": 0, "n_shard": 0})
+        g["count"] += 1
+        if sizes[i] >= g["n_shard"]:
+            g.update(n_shard=sizes[i],
+                     **{k: t[k] for k in ("T_local", "T_upload", "T_global",
+                                          "T_download", "T", "payload_bytes")})
+    rows = [{"tier": tier, "profile": prof, **g}
+            for (tier, prof), g in per_group.items()]
+    frac = scenario.participation.fraction
+    n_sel = (spec.n_clients if frac >= 1.0
+             else max(1, int(round(frac * spec.n_clients))))
+    out = {"kind": "fl_scenario_census", "scenario": scenario.to_dict(),
+           "n_clients": spec.n_clients, "n_samples": spec.n_samples,
+           "shard_sizes_exact": spec.partition == "iid",
+           "n_participants_per_round": n_sel,
+           # expectation under uniform without-replacement sampling
+           "total_upload_bytes_per_round": total_bytes * n_sel / spec.n_clients,
+           "tiers": rows}
+    timing = scenario.timing
+    if isinstance(timing, AsyncBuffered):
+        out["buffer_size"] = timing.buffer_size
+        out["dispatch_T_min"] = min(per_client_T)
+        out["dispatch_T_max"] = max(per_client_T)
+    elif isinstance(timing, SyncDrop):
+        dropped = sum(1 for T in per_client_T if T > timing.deadline)
+        kept = [T for T in per_client_T if T <= timing.deadline]
+        out["n_dropped_by_deadline"] = dropped
+        out["round_wall_time"] = (timing.deadline if dropped
+                                  else max(kept) if kept else 0.0)
+    else:
+        out["round_wall_time"] = max(per_client_T)
+    return out

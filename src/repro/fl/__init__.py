@@ -1,0 +1,27 @@
+"""``repro.fl`` — the one-import federated learning surface.
+
+Declare an experiment as an :class:`FLScenario` (DESIGN.md §11) and run
+it with :func:`simulate`; the legacy server classes remain available as
+the internal execution layer the factory assembles:
+
+    from repro.fl import FLScenario, FleetSpec, SyncDrop, simulate
+
+    result = simulate(FLScenario(
+        fleet=FleetSpec(tiers=("hub", "high", "mid", "low"), n_samples=1600),
+        timing=SyncDrop(deadline=0.5)), rounds=30)
+    print(result.final.loss, result.sim_time)
+"""
+from repro.core.compression import (CompressionPlan, DEVICE_TIERS,
+                                    default_tier_plans)  # noqa: F401
+from repro.core.federated import (AsyncFLServer, Client, Cohort,
+                                  CohortFLServer, FLServer,
+                                  build_cohorts)  # noqa: F401
+from repro.core.heterogeneity import (PROFILES, DeviceProfile,
+                                      cohort_round_time,
+                                      round_time)  # noqa: F401
+from repro.core.scenario import (AsyncBuffered, FleetSpec, FLScenario,
+                                 LocalTraining, ParticipationPolicy,
+                                 RoundRecord, RunResult, SyncDrop,
+                                 SyncWait, TimingPolicy, UploadPolicy,
+                                 build_server, scenario_census, simulate,
+                                 timing_from_dict)  # noqa: F401

@@ -6,6 +6,9 @@ on the production meshes, record memory/cost/collective analysis.
       --shape train_4k --mesh single
   PYTHONPATH=src python -m repro.launch.dryrun --fl-async \
       --fl-clients 256 --fl-buffer 64      # async schedule census only
+  PYTHONPATH=src python -m repro.launch.dryrun --fl-census scenario.json
+      # declarative-scenario census (DESIGN.md §11): fleet, payload
+      # bytes, Eq. (1) time table — eval_shape only, no accelerator
 
 Produces one JSON per (arch, shape, mesh) under experiments/dryrun/ —
 compile wall time, per-device HLO memory/FLOP/byte analysis, and the
@@ -226,15 +229,18 @@ def run_fl_async(out_dir: str, n_clients: int = 256, buffer_size: int = 64,
     from repro.configs.paper_mlp import config as mlp_config
     from repro.core.compression import DEVICE_TIERS
     from repro.core.heterogeneity import PROFILES, round_time
+    from repro.core.scenario import FleetSpec
     from repro.core.schedule import schedule_census
     from repro.models import mlp
 
     params = mlp.init(jax.random.PRNGKey(0), mlp_config())
-    plan_tiers = ("hub", "high", "mid", "low")
-    profiles = ("hub", "mid", "mid", "low")      # speed mix: hub/mid/low
-    times = [round_time(params, DEVICE_TIERS[plan_tiers[i % 4]],
-                        PROFILES[profiles[i % 4]], 16)["T"]
-             for i in range(n_clients)]
+    # speed mix: hub/mid/low profiles over the 4-plan tier cycle
+    spec = FleetSpec.cycling(("hub", "high", "mid", "low"), n_clients,
+                             profiles=("hub", "mid", "mid", "low"))
+    sizes = spec.shard_sizes()
+    times = [round_time(params, DEVICE_TIERS[t], PROFILES[p], sizes[i])["T"]
+             for i, (t, p) in enumerate(zip(spec.tiers,
+                                            spec.client_profiles))]
     rec = schedule_census(times, buffer_size, windows, seed=0,
                           jitter=jitter)
     rec.update(kind="fl_async_schedule", jitter=jitter)
@@ -252,6 +258,61 @@ def run_fl_async(out_dir: str, n_clients: int = 256, buffer_size: int = 64,
     return rec
 
 
+def run_fl_census(out_dir: str, scenario_json: str = "",
+                  n_clients: int = 256) -> dict:
+    """Declarative-scenario census (DESIGN.md §11): print a scenario's
+    fleet composition, per-round payload bytes, and Eq. (1) time table
+    WITHOUT touching the accelerator — params are ``jax.eval_shape``
+    stand-ins, times are host arithmetic. ``scenario_json`` is a file
+    produced by ``FLScenario.to_dict()``; empty means the reference
+    256-client hub/high/mid/low fleet."""
+    from repro.core.scenario import (FleetSpec, FLScenario,
+                                     scenario_census)
+
+    if scenario_json:
+        with open(scenario_json) as f:
+            scenario = FLScenario.from_dict(json.load(f))
+    else:
+        scenario = FLScenario(fleet=FleetSpec.cycling(
+            ("hub", "high", "mid", "low"), n_clients))
+    rec = scenario_census(scenario)
+
+    timing = rec["scenario"]["timing"]
+    print(f"fl-scenario census: {rec['n_clients']} clients "
+          f"({rec['n_participants_per_round']}/round), "
+          f"{rec['n_samples']} samples, mode={rec['scenario']['local']['mode']}, "
+          f"timing={timing['kind']}, runtime={rec['scenario']['runtime']}")
+    if not rec["shard_sizes_exact"]:
+        print("  note: dirichlet shard sizes depend on the label draw; "
+              "the table assumes even shards")
+    hdr = (f"  {'tier':10s} {'profile':10s} {'count':>5s} {'shard':>6s} "
+           f"{'payload':>10s} {'T_local':>9s} {'T_up':>9s} {'T_down':>9s} "
+           f"{'T':>9s}")
+    print(hdr)
+    for r in rec["tiers"]:
+        print(f"  {r['tier']:10s} {r['profile']:10s} {r['count']:5d} "
+              f"{r['n_shard']:6d} {r['payload_bytes']:9.0f}B "
+              f"{r['T_local']:9.4f} {r['T_upload']:9.4f} "
+              f"{r['T_download']:9.4f} {r['T']:9.4f}")
+    print(f"  total upload/round (expected): "
+          f"{rec['total_upload_bytes_per_round']:.0f}B")
+    if "round_wall_time" in rec:
+        drop = rec.get("n_dropped_by_deadline")
+        print(f"  round wall time: {rec['round_wall_time']:.4f}s"
+              + (f"  (deadline drops {drop} clients)" if drop else ""))
+    else:
+        print(f"  async buffer={rec['buffer_size']}: dispatch T in "
+              f"[{rec['dispatch_T_min']:.4f}, {rec['dispatch_T_max']:.4f}]s")
+
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir,
+                      f"fl_scenario__{rec['n_clients']}__{timing['kind']}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"  -> {fn}")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -261,11 +322,21 @@ def main() -> None:
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--fl-async", action="store_true",
                     help="async FL schedule census only (DESIGN.md §10)")
+    ap.add_argument("--fl-census", nargs="?", const="", default=None,
+                    metavar="SCENARIO_JSON",
+                    help="declarative-scenario census (DESIGN.md §11): "
+                         "pass an FLScenario.to_dict() JSON file, or no "
+                         "value for the reference 256-client fleet")
     ap.add_argument("--fl-clients", type=int, default=256)
     ap.add_argument("--fl-buffer", type=int, default=64)
     ap.add_argument("--fl-windows", type=int, default=200)
     ap.add_argument("--fl-jitter", type=float, default=0.1)
     args = ap.parse_args()
+
+    if args.fl_census is not None:
+        run_fl_census(args.out, scenario_json=args.fl_census,
+                      n_clients=args.fl_clients)
+        return
 
     if args.fl_async:
         run_fl_async(args.out, n_clients=args.fl_clients,

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, strategies as st
 from repro import optim
 from repro.configs.paper_mlp import config
 from repro.core.compression import DEVICE_TIERS
@@ -87,6 +88,37 @@ def test_stack_shards_truncates_to_common_floor():
     stacked = stack_shards(shards)
     assert stacked["x"].shape == (2, 5, 3)
     assert stacked["y"].shape == (2, 5)
+
+
+@functools.lru_cache(maxsize=1)
+def _time_params():
+    return mlp.init(KEY, config())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from(sorted(PROFILES)), min_size=1, max_size=6),
+       st.sampled_from(sorted(DEVICE_TIERS)),
+       st.integers(min_value=1, max_value=1024),
+       st.integers(min_value=1, max_value=8),
+       st.booleans())
+def test_cohort_round_time_parity_hypothesis(profile_names, tier, n_samples,
+                                             local_steps, per_client_ns):
+    """Property: under arbitrary profile/plan draws, the vectorized
+    Eq. (1) arrays must match the scalar round_time leaf-for-leaf —
+    including payload_bytes — for scalar AND per-client n_samples."""
+    params = _time_params()
+    plan = DEVICE_TIERS[tier]
+    profs = [PROFILES[p] for p in profile_names]
+    ns = ([n_samples + 3 * i for i in range(len(profs))] if per_client_ns
+          else n_samples)
+    vec = cohort_round_time(params, plan, profs, ns, local_steps)
+    assert all(v.shape == (len(profs),) for v in vec.values())
+    for i, p in enumerate(profs):
+        n_i = ns[i] if per_client_ns else n_samples
+        ref = round_time(params, plan, p, n_i, local_steps)
+        for k in ("T_local", "T_upload", "T_global", "T_download", "T",
+                  "payload_bytes"):
+            assert vec[k][i] == pytest.approx(ref[k], rel=1e-12), (k, i)
 
 
 def test_cohort_round_time_matches_scalar_round_time():

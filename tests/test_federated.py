@@ -28,6 +28,31 @@ def _server(mode="fedsgd", tiers=("hub", "high", "mid", "low"), **kw):
                     params=mlp.init(KEY, cfg), mode=mode, **kw)
 
 
+def test_flserver_ef_buffer_matches_param_dtype():
+    """Client-granular EF residuals must live in the param leaf dtype and
+    stay there (the cohort path's PR-2 contract, `_init_cohort_ef`): on a
+    bf16 fleet the buffer must not silently widen to float32 even after
+    the server update promotes the live params."""
+    cfg = config()
+    data = make_gaussian_dataset(KEY, 128)
+    shards = partition_iid(KEY, data, 2)
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16),
+                          mlp.init(KEY, cfg))
+    clients = [Client(i, DEVICE_TIERS[t], shards[i], profile_name=t)
+               for i, t in enumerate(("mid", "low"))]
+    srv = FLServer(model=MODEL, optimizer=optim.sgd(1.0), clients=clients,
+                   params=params, upload_quant="fp8_e4m3",
+                   error_feedback=True)
+    for _ in range(2):                   # round 2 runs on promoted params
+        srv.round()
+    for c in srv.clients:
+        assert c.ef_buffer is not None
+        for p, e in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(c.ef_buffer)):
+            assert e.dtype == p.dtype == jnp.bfloat16
+            assert e.shape == p.shape
+
+
 def _val_acc(params):
     val = make_gaussian_dataset(jax.random.PRNGKey(7), 1000)
     return float(mlp.accuracy(params, val["x"], val["y"]))

@@ -1,0 +1,323 @@
+"""Declarative scenario API (DESIGN.md §11): every legacy kwarg
+combination must map to an FLScenario whose simulate() trajectory is
+bit-identical to direct server construction; specs round-trip through
+to_dict()/from_dict(); the census never touches device arrays."""
+import json
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs.paper_mlp import config
+from repro.core.federated import AsyncFLServer, CohortFLServer, FLServer
+from repro.core.scenario import (AsyncBuffered, FleetSpec, FLScenario,
+                                 LocalTraining, ParticipationPolicy,
+                                 RoundRecord, SyncDrop,
+                                 UploadPolicy, build_server,
+                                 scenario_census, simulate,
+                                 timing_from_dict)
+from repro.models import mlp
+
+KEY = jax.random.PRNGKey(42)
+MODEL = types.SimpleNamespace(loss_fn=mlp.loss_fn)
+FLEET = FleetSpec(tiers=("hub", "high", "mid", "low", "mid", "low"),
+                  n_samples=384)
+ROUNDS = 5
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------- legacy kwargs -> scenario bit-identity
+
+# (id, scenario, legacy server kind, legacy ctor kwargs, optimizer)
+LEGACY_GRID = [
+    pytest.param(
+        FLScenario(fleet=FLEET),
+        "cohort", dict(mode="fedsgd", straggler="wait"), "adam",
+        id="sync_wait_fedsgd"),
+    pytest.param(
+        FLScenario(fleet=FLEET,
+                   local=LocalTraining(mode="fedavg", local_steps=2,
+                                       local_lr=0.5, server_lr=0.7)),
+        "cohort", dict(mode="fedavg", local_steps=2, local_lr=0.5,
+                       server_lr=0.7, straggler="wait"), "sgd",
+        id="sync_wait_fedavg"),
+    pytest.param(
+        FLScenario(fleet=FLEET,
+                   upload=UploadPolicy(quant="fp8_e4m3",
+                                       error_feedback=True)),
+        "cohort", dict(mode="fedsgd", straggler="wait",
+                       upload_quant="fp8_e4m3", error_feedback=True),
+        "adam", id="sync_wait_fedsgd_quant_ef",
+        marks=pytest.mark.slow),
+    pytest.param(
+        FLScenario(fleet=FLEET, timing=SyncDrop(deadline=0.0008)),
+        "cohort", dict(mode="fedsgd", straggler="drop", deadline=0.0008),
+        "adam", id="sync_drop_fedsgd"),
+    pytest.param(
+        FLScenario(fleet=FLEET,
+                   participation=ParticipationPolicy(fraction=0.5, seed=3)),
+        "cohort", dict(mode="fedsgd", straggler="wait",
+                       sample_fraction=0.5, seed=3), "adam",
+        id="sync_wait_partial_participation"),
+    pytest.param(
+        FLScenario(fleet=FLEET,
+                   timing=AsyncBuffered(buffer_size=3, staleness_exp=0.5)),
+        "async", dict(mode="fedsgd", buffer_size=3, staleness_exp=0.5),
+        "adam", id="async_buffered_fedsgd"),
+    pytest.param(
+        FLScenario(fleet=FLEET,
+                   local=LocalTraining(mode="fedavg", local_steps=2,
+                                       local_lr=0.5),
+                   upload=UploadPolicy(quant="fp8_e4m3",
+                                       error_feedback=True),
+                   timing=AsyncBuffered(buffer_size=2, staleness_exp=0.5,
+                                        time_jitter=0.2),
+                   participation=ParticipationPolicy(seed=1)),
+        "async", dict(mode="fedavg", local_steps=2, local_lr=0.5,
+                      upload_quant="fp8_e4m3", error_feedback=True,
+                      buffer_size=2, staleness_exp=0.5, time_jitter=0.2,
+                      seed=1), "sgd",
+        id="async_buffered_fedavg_quant_ef_jitter",
+        marks=pytest.mark.slow),
+    pytest.param(
+        FLScenario(fleet=FLEET, runtime="client"),
+        "client", dict(mode="fedsgd"), "adam",
+        id="client_loop_fedsgd"),
+]
+
+
+def _optimizer(name):
+    return optim.adam(0.05) if name == "adam" else optim.sgd(1.0)
+
+
+@pytest.mark.parametrize("scenario,kind,legacy_kw,opt_name", LEGACY_GRID)
+def test_legacy_kwargs_map_to_bit_identical_trajectory(scenario, kind,
+                                                       legacy_kw, opt_name):
+    """simulate(FLScenario(...)) must reproduce the directly-constructed
+    legacy server's params/opt_state trajectory bit-identically over
+    ROUNDS rounds — the scenario layer adds semantics, never numerics."""
+    params = mlp.init(KEY, config())
+    direct_clients = scenario.fleet.build_clients()
+    common = dict(model=MODEL, optimizer=_optimizer(opt_name),
+                  params=params)
+    if kind == "client":
+        direct = FLServer(clients=direct_clients, **common, **legacy_kw)
+    elif kind == "cohort":
+        direct = CohortFLServer.from_clients(direct_clients, **common,
+                                             **legacy_kw)
+    else:
+        direct = AsyncFLServer.from_clients(direct_clients, **common,
+                                            **legacy_kw)
+    advance = direct.step if kind == "async" else direct.round
+    for _ in range(ROUNDS):
+        advance()
+
+    res = simulate(scenario, ROUNDS, model=MODEL,
+                   optimizer=_optimizer(opt_name), params=params)
+    _assert_trees_equal(direct.params, res.params)
+    _assert_trees_equal(direct.opt_state, res.opt_state)
+    assert len(res.records) == ROUNDS
+    assert [r.loss for r in res.records] == [h["loss"]
+                                             for h in direct.history]
+
+
+def test_fleet_build_is_deterministic():
+    a = FLEET.build_clients()
+    b = FLEET.build_clients()
+    for ca, cb in zip(a, b):
+        assert (ca.id, ca.plan, ca.profile_name) == (cb.id, cb.plan,
+                                                     cb.profile_name)
+        _assert_trees_equal(ca.data, cb.data)
+    spec = FleetSpec(tiers=FLEET.tiers, n_samples=384,
+                     partition="dirichlet", alpha=0.3, data_seed=5)
+    _assert_trees_equal([c.data for c in spec.build_clients()],
+                        [c.data for c in spec.build_clients()])
+
+
+def test_build_server_selects_runtime():
+    params = mlp.init(KEY, config())
+    mk = lambda sc: build_server(sc, MODEL, optim.sgd(1.0), params)
+    assert isinstance(mk(FLScenario(fleet=FLEET)), CohortFLServer)
+    assert isinstance(mk(FLScenario(fleet=FLEET, runtime="client")),
+                      FLServer)
+    srv = mk(FLScenario(fleet=FLEET, timing=SyncDrop(deadline=0.1)))
+    assert isinstance(srv, CohortFLServer) and srv.straggler == "drop"
+    assert isinstance(mk(FLScenario(fleet=FLEET,
+                                    timing=AsyncBuffered(buffer_size=2))),
+                      AsyncFLServer)
+
+
+# ------------------------------------------------- serialization
+
+SCENARIO_ZOO = [
+    FLScenario(fleet=FLEET),
+    FLScenario(fleet=FleetSpec(tiers=("hub", "low"), profiles=("mid", "hub"),
+                               n_samples=100, partition="dirichlet",
+                               alpha=0.3, data_seed=7),
+               local=LocalTraining(mode="fedavg", local_steps=3,
+                                   local_lr=0.2, server_lr=0.9),
+               upload=UploadPolicy(quant="fp8_e5m2", error_feedback=True),
+               participation=ParticipationPolicy(fraction=0.25, seed=11),
+               timing=SyncDrop(deadline=2.5)),
+    FLScenario(fleet=FLEET,
+               timing=AsyncBuffered(buffer_size=8, staleness_exp=1.5,
+                                    time_jitter=0.1)),
+    FLScenario(fleet=FLEET, runtime="client"),
+]
+
+
+@pytest.mark.parametrize("scenario", SCENARIO_ZOO,
+                         ids=lambda s: s.timing.kind + "_" + s.runtime)
+def test_scenario_roundtrips_through_json(scenario):
+    wire = json.dumps(scenario.to_dict())          # must be JSON-safe
+    back = FLScenario.from_dict(json.loads(wire))
+    assert back == scenario
+    assert hash(back) == hash(scenario)            # frozen + hashable
+
+
+def test_timing_from_dict_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown timing kind"):
+        timing_from_dict({"kind": "warp_drive"})
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: FleetSpec(tiers=()),
+    lambda: FleetSpec(tiers=("nope",), n_samples=8),
+    lambda: FleetSpec(tiers=("hub",), profiles=("hub", "mid"), n_samples=8),
+    lambda: FleetSpec(tiers=("hub",), partition="striped", n_samples=8),
+    lambda: LocalTraining(mode="fedprox"),
+    lambda: UploadPolicy(quant="fp99"),
+    lambda: UploadPolicy(error_feedback=True),
+    lambda: ParticipationPolicy(fraction=0.0),
+    lambda: SyncDrop(deadline=0.0),
+    lambda: AsyncBuffered(buffer_size=0),
+    lambda: AsyncBuffered(staleness_exp=-1.0),
+    lambda: FLScenario(fleet=FLEET, runtime="gpu"),
+    lambda: FLScenario(fleet=FLEET, runtime="client",
+                       timing=SyncDrop(deadline=1.0)),
+    lambda: FLScenario(fleet=FLEET, runtime="client",
+                       participation=ParticipationPolicy(fraction=0.5)),
+    lambda: FLScenario(fleet=FLEET, timing=AsyncBuffered(buffer_size=2),
+                       participation=ParticipationPolicy(fraction=0.5)),
+])
+def test_invalid_specs_raise(bad):
+    with pytest.raises(ValueError):
+        bad()
+
+
+def test_build_clients_validates_against_spec():
+    with pytest.raises(ValueError):
+        FleetSpec(tiers=("hub", "mid"), n_samples=1).build_clients()
+    with pytest.raises(ValueError):
+        FLEET.build_clients(shards=[{"x": jnp.ones((2, 5))}])  # wrong count
+
+
+# ------------------------------------------------------- census
+
+def test_scenario_census_is_host_only_and_consistent():
+    """The census must be JSON-safe (no device arrays) and agree with
+    the Eq. (1) model evaluated on the real params."""
+    from repro.core.compression import DEVICE_TIERS
+    from repro.core.heterogeneity import PROFILES, round_time
+
+    sc = FLScenario(fleet=FleetSpec(tiers=("hub", "mid", "low"),
+                                    n_samples=300),
+                    local=LocalTraining(mode="fedavg", local_steps=4))
+    cen = scenario_census(sc)
+    json.dumps(cen)                                # host scalars only
+    assert cen["n_clients"] == 3
+    assert {r["tier"] for r in cen["tiers"]} == {"hub", "mid", "low"}
+
+    params = mlp.init(KEY, config())
+    expect = sum(round_time(params, DEVICE_TIERS[t], PROFILES[t], 100,
+                            4)["payload_bytes"]
+                 for t in ("hub", "mid", "low"))
+    assert cen["total_upload_bytes_per_round"] == pytest.approx(expect)
+    assert cen["round_wall_time"] == pytest.approx(
+        round_time(params, DEVICE_TIERS["low"], PROFILES["low"], 100,
+                   4)["T"])
+
+
+def test_census_sync_drop_counts_deadline_victims():
+    sc = FLScenario(fleet=FleetSpec(tiers=("hub", "embedded"),
+                                    n_samples=200),
+                    timing=SyncDrop(deadline=0.001))
+    cen = scenario_census(sc)
+    assert cen["n_dropped_by_deadline"] == 1       # embedded blows 1ms
+    assert cen["round_wall_time"] == 0.001         # server waits out deadline
+
+
+def test_census_scales_upload_bytes_by_participation():
+    base = scenario_census(FLScenario(fleet=FLEET))
+    part = scenario_census(FLScenario(
+        fleet=FLEET, participation=ParticipationPolicy(fraction=0.5)))
+    assert base["n_participants_per_round"] == FLEET.n_clients
+    assert part["n_participants_per_round"] == 3    # round(0.5 * 6)
+    assert part["total_upload_bytes_per_round"] == pytest.approx(
+        base["total_upload_bytes_per_round"] / 2)
+
+
+def test_census_flags_dirichlet_shard_sizes_as_approximate():
+    assert scenario_census(FLScenario(fleet=FLEET))["shard_sizes_exact"]
+    cen = scenario_census(FLScenario(
+        fleet=FleetSpec(tiers=("hub", "low"), n_samples=100,
+                        partition="dirichlet")))
+    assert cen["shard_sizes_exact"] is False
+
+
+def test_census_async_reports_dispatch_spread():
+    sc = FLScenario(fleet=FLEET, timing=AsyncBuffered(buffer_size=4))
+    cen = scenario_census(sc)
+    assert cen["buffer_size"] == 4
+    assert 0 < cen["dispatch_T_min"] <= cen["dispatch_T_max"]
+
+
+# --------------------------------------------------- typed records
+
+def test_round_record_from_history_drops_unknown_keys():
+    rec = RoundRecord.from_history({"step": 1, "loss": 0.5,
+                                    "client_losses": [0.4, 0.6],
+                                    "someday_a_new_key": object()})
+    assert rec.step == 1 and rec.client_losses == (0.4, 0.6)
+    assert rec.t is None and rec.staleness_mean is None
+
+
+def test_run_result_shapes_per_runtime():
+    res = simulate(FLScenario(fleet=FLEET), 2, model=MODEL,
+                   optimizer=optim.sgd(1.0),
+                   params=mlp.init(KEY, config()))
+    assert res.final.n_participants == FLEET.n_clients
+    assert res.sim_time == pytest.approx(
+        sum(r.round_wall_time for r in res.records))
+    assert set(res.summary()) == {"rounds", "loss", "sim_time_s",
+                                  "total_upload_bytes"}
+
+    asy = simulate(FLScenario(fleet=FLEET,
+                              timing=AsyncBuffered(buffer_size=3)),
+                   2, model=MODEL, optimizer=optim.sgd(1.0),
+                   params=mlp.init(KEY, config()))
+    assert asy.final.t is not None and asy.final.n_updates == 3
+    assert asy.sim_time == asy.final.t
+    with pytest.raises(ValueError):
+        simulate(FLScenario(fleet=FLEET), 0)
+
+
+def test_cycling_fleet_spec_matches_manual_layout():
+    spec = FleetSpec.cycling(("hub", "mid"), 5, profiles=("low",),
+                             samples_per_client=8)
+    assert spec.tiers == ("hub", "mid", "hub", "mid", "hub")
+    assert spec.client_profiles == ("low",) * 5
+    assert spec.n_samples == 40
+    assert spec.shard_sizes() == [8] * 5
+    # array_split convention: first n % c shards get the extra sample
+    assert FleetSpec(tiers=("hub", "mid", "low"),
+                     n_samples=10).shard_sizes() == [4, 3, 3]
