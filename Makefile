@@ -4,9 +4,12 @@
 #   make test-fast  - quick loop (<90 s): everything not marked `slow`
 #   make lint       - ruff, check-only (no autofix churn); rule set is
 #                     pinned in pyproject.toml [tool.ruff]
+#   make bench-fl   - scan-engine perf record -> BENCH_fl.json (rounds/sec,
+#                     speedup vs the eager cohort loop, commit hash);
+#                     CI uploads it as an artifact per run
 PYTEST = PYTHONPATH=src python -m pytest -x -q
 
-.PHONY: test test-fast lint bench
+.PHONY: test test-fast lint bench bench-fl
 test:
 	$(PYTEST)
 
@@ -18,3 +21,6 @@ lint:
 
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py
+
+bench-fl:
+	PYTHONPATH=src:. python benchmarks/fl_bench.py --json BENCH_fl.json

@@ -17,7 +17,9 @@ scenario = FLScenario(
 )
 print("tiers:", {t: c for (t, _), c in scenario.fleet.counts().items()})
 
-result = simulate(scenario, rounds=30)      # paper MLP task by default
+# engine="scan" compiles all 30 rounds into ONE donated-buffer program
+# (DESIGN.md §12) — same trajectory as the eager loop, bit for bit
+result = simulate(scenario, rounds=30, engine="scan")
 
 for rec in result.records[4::5]:
     print(f"round {rec.step:3d}  global-model loss {rec.loss:.4f}  "

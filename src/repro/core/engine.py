@@ -1,0 +1,373 @@
+"""On-device multi-round scan engine (DESIGN.md §12): compile a chunk of
+R federated rounds into ONE jitted, donated-buffer program.
+
+Why
+---
+The eager cohort runtime (``CohortFLServer.round``, DESIGN.md §9) already
+collapsed a round to O(#plans) dispatches + one device→host sync — but it
+still drives the ROUND LOOP from Python: every round pays the dispatch
+latency of each cohort step, the op-by-op aggregation/update chain, host
+participation sampling, and a blocking ``device_get`` before the next
+round may start. At the ROADMAP's "thousands of cheap rounds" scale
+(FedBuff/large-cohort regimes), that per-round overhead — not FLOPs —
+dominates simulated-round throughput.
+
+What
+----
+:class:`ScanEngine` compiles R rounds into one program:
+
+- ``jax.lax.scan`` over rounds; the cohorts are unrolled inside the body
+  (plans are static, so each cohort keeps its own specialized step);
+- participation AND deadline-drop masks are precomputed on host as
+  stacked ``(R, C)`` float arrays, preserving the eager path's numpy RNG
+  sequence (``default_rng([seed, step])`` per round) and its host-side
+  ``T > deadline`` float64 comparison — so WHO participates is
+  bit-identical to the eager path by construction;
+- ``params`` / ``opt_state`` / error-feedback buffers ride the scan
+  carry and the whole carry is donated (``donate_argnums=(0,)``), so the
+  global model updates in place across rounds and chunks;
+- per-round metrics (loss sum, Eq. (1) wall-clock as a device-side
+  masked max, upload bytes, participant count) are stacked by the scan
+  and synced to host ONCE per chunk;
+- rounds in which nobody participates (deadline dropped everyone) apply
+  no update: the carry is ``where``-selected, matching the eager path's
+  skip.
+
+Bit-identity
+------------
+The round body reuses the eager path's step functions verbatim
+(``federated.cohort_step_fn``) and replays its aggregation/update chain
+(``accumulate_cohort`` → ``finalize`` → optimizer) in the same order.
+One compilation detail matters: fused into a single XLA module, the
+cohort-step outputs would fuse INTO the aggregation chain and FMA
+contraction changes low-order bits. ``jax.lax.optimization_barrier`` at
+each cohort-step output and around the server-apply subgraph — exactly
+where the eager path has dispatch boundaries — pins the compiled
+arithmetic to the eager path's, and ``tests/test_engine.py`` proves
+params/opt_state trajectories bit-identical across sync-wait,
+sync-drop, fedavg and quant+EF scenarios, with SGD and momentum
+optimizers. Known limit: Adam's bias-corrected rsqrt update compiles
+with a one-ulp difference inside the scan despite the barriers
+(its m/v moments stay exact); the engine-vs-eager Adam trajectory is
+therefore parity-tested to 1e-6, not bitwise.
+
+Aggregation backends
+--------------------
+``agg="sequential"`` (default) replays the eager accumulate/finalize
+chain — bit-identical, O(#cohorts) passes over the gradient tree.
+``agg="pallas"`` routes every ≥2-D leaf through the fused
+``grad_aggregate`` Pallas kernel instead: cohort update-sums and masks
+are stacked on a tier axis and the kernel computes numerator,
+denominator (with the cohort form's separate ``w·n_part`` denominator
+weights) and divide in one pass. The fused reduction reorders the
+tier-axis sum, so it is parity-tested to tolerance (not bitwise) against
+``aggregation.finalize``; scalar-denominator leaves (1-D, router) keep
+the sequential path.
+
+Use it via ``simulate(scenario, rounds, engine="scan", chunk_rounds=N)``
+(``core/scenario.py``) — the async and per-client runtimes fall back to
+the eager loop — or construct it directly around a ``CohortFLServer``.
+``benchmarks/fl_bench.py`` ``fl/engine_*`` rows measure ≥5× rounds/sec
+over the eager cohort loop at 256 clients / 4 plans / 50 rounds.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (accumulate_cohort, finalize,
+                                    zeros_like_acc)
+from repro.core.federated import (CohortFLServer, _apply_fns,
+                                  _init_cohort_ef, cohort_step_fn)
+
+AGG_BACKENDS = ("sequential", "pallas")
+
+
+def _not_scannable(server) -> str | None:
+    """Why ``server`` cannot run under the scan engine (None if it can)."""
+    if not isinstance(server, CohortFLServer):
+        return (f"{type(server).__name__} is not cohort-vectorized; the "
+                "scan engine compiles CohortFLServer rounds only (the "
+                "async runtime's event-driven windows and the per-client "
+                "loop stay eager)")
+    return None
+
+
+@dataclass
+class ScanEngine:
+    """Compiles chunks of ``CohortFLServer`` rounds into one scanned,
+    donated-buffer program. The server object stays the source of truth:
+    the engine reads its fleet/policies, advances its ``params`` /
+    ``opt_state`` / ``step`` / EF buffers, and appends eager-schema
+    records to its ``history`` — ``run()`` is a drop-in replacement for
+    R ``server.round()`` calls (bit-identical with the default backend).
+
+    ``chunk_rounds=0`` compiles the whole requested run as one chunk;
+    any other value bounds program length (metrics are synced and
+    records materialized once per chunk). Each distinct chunk length
+    compiles once and is cached by jit, so prefer chunk sizes that
+    divide the round budget.
+    """
+    server: CohortFLServer
+    chunk_rounds: int = 0
+    agg: str = "sequential"
+    chunks_run: int = field(default=0, init=False)
+    rounds_run: int = field(default=0, init=False)
+    # the last carry THIS engine produced: state it is allowed to donate
+    _last_out: tuple | None = field(default=None, init=False, repr=False)
+
+    def __post_init__(self):
+        reason = _not_scannable(self.server)
+        if reason:
+            raise TypeError(reason)
+        if self.agg not in AGG_BACKENDS:
+            raise ValueError(f"agg must be one of {AGG_BACKENDS}, got {self.agg!r}")
+        if self.chunk_rounds < 0:
+            raise ValueError("chunk_rounds must be >= 0 (0 = one chunk per run)")
+        srv = self.server
+        self._steps = [cohort_step_fn(srv.model.loss_fn, c.plan, srv.mode,
+                                      srv.local_steps, srv.local_lr,
+                                      srv.upload_quant)
+                       for c in srv.cohorts]
+        self._n_batch = [next(iter(c.data.values())).shape[1]
+                         for c in srv.cohorts]
+        # Eq. (1) per-client constants: host float64 for the drop masks
+        # (bit-identical to the eager comparison); f32 device copies for
+        # the in-program wall max and byte sums, so those two RECORD
+        # fields carry f32 rounding vs the eager path's float64 host
+        # arithmetic (asserted approx, not equal, in test_engine.py)
+        self._times = [srv.cohort_times(ci, nb)
+                       for ci, nb in enumerate(self._n_batch)]
+        self._T_dev = [jnp.asarray(t["T"], jnp.float32) for t in self._times]
+        self._payload_dev = [jnp.asarray(t["payload_bytes"], jnp.float32)
+                             for t in self._times]
+        # the raw twin of the jitted apply the eager round dispatches
+        _, self._apply = _apply_fns(srv.optimizer, srv.mode, srv.server_lr)
+        self._chunk = jax.jit(self._chunk_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ device
+
+    def _aggregate_sequential(self, params, per_cohort):
+        """The eager path's aggregation, replayed in cohort order:
+        zero-participation cohorts contribute exact zeros (the eager loop
+        skips them; adding 0.0 to a finite f32 accumulator is bitwise
+        identity, property-tested)."""
+        acc = zeros_like_acc(params)
+        for g_sum, masks, weight, count in per_cohort:
+            acc = accumulate_cohort(acc, g_sum, masks, jnp.float32(weight),
+                                    count)
+        return finalize(acc)
+
+    def _aggregate_pallas(self, params, per_cohort):
+        """Fused-kernel aggregation: stack the cohorts on a tier axis and
+        run ``grad_aggregate`` once per ≥2-D leaf (numerator weights
+        ``w``, denominator weights ``w·n_part`` — the cohort accumulator
+        form). Scalar-denominator leaves (1-D params, excluded ≥2-D
+        leaves have broadcast masks and still take the kernel) fall back
+        to the sequential formula leaf-wise."""
+        from repro.kernels.grad_aggregate import grad_aggregate
+        leaves_p, treedef = jax.tree_util.tree_flatten(params)
+        leaves_g = [jax.tree.leaves(g) for (g, _, _, _) in per_cohort]
+        leaves_m = [jax.tree.leaves(m) for (_, m, _, _) in per_cohort]
+        wn = jnp.asarray([w for (_, _, w, _) in per_cohort], jnp.float32)
+        wd = jnp.stack([jnp.float32(w) * c for (_, _, w, c) in per_cohort])
+        out = []
+        for li, p in enumerate(leaves_p):
+            g_t = [lg[li] for lg in leaves_g]
+            m_t = [lm[li] for lm in leaves_m]
+            if p.ndim >= 2:
+                out.append(grad_aggregate(jnp.stack(g_t), jnp.stack(m_t),
+                                          wn, w_den=wd))
+            else:
+                # leaf-wise replay of the reference chain, so the
+                # aggregation formula lives in aggregation.py, not here
+                acc = (jnp.zeros(p.shape, jnp.float32),
+                       jnp.zeros((), jnp.float32))
+                for t, (_, _, w, count) in enumerate(per_cohort):
+                    acc = accumulate_cohort(acc, g_t[t], m_t[t],
+                                            jnp.float32(w), count)
+                out.append(finalize(acc))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _round_body(self, carry, x, datas):
+        """One federated round, fused: the eager round's cohort loop with
+        an optimization barrier standing in for each dispatch boundary."""
+        srv = self.server
+        params, opt_state, efs = carry
+        per_cohort, new_efs = [], []
+        loss_sum = jnp.float32(0.0)
+        wall = jnp.float32(-np.inf)
+        up_bytes = jnp.float32(0.0)
+        n_part = jnp.float32(0.0)
+        for ci, step in enumerate(self._steps):
+            part = x["part"][ci]
+            ef = efs[ci]
+            if srv.upload_quant is not None and not srv.error_feedback:
+                # the eager path re-zeros the residuals every dispatch
+                # when feedback is off; recreate them in-program
+                ef = _init_cohort_ef(srv.cohorts[ci].size, params)
+            g_sum, masks, l_sum, new_ef = jax.lax.optimization_barrier(
+                step(params, datas[ci], part, ef))
+            per_cohort.append((g_sum, masks, srv.cohorts[ci].plan.weight,
+                               jnp.sum(part)))
+            new_efs.append(new_ef if srv.error_feedback else efs[ci])
+            loss_sum = loss_sum + l_sum
+            wall = jnp.maximum(wall, jnp.max(
+                jnp.where(part > 0, self._T_dev[ci], -np.inf)))
+            up_bytes = up_bytes + jnp.dot(part, self._payload_dev[ci])
+            n_part = n_part + jnp.sum(part)
+
+        agg = (self._aggregate_sequential(params, per_cohort)
+               if self.agg == "sequential"
+               else self._aggregate_pallas(params, per_cohort))
+        # barriers bracket the apply exactly like its eager jit boundary,
+        # so the update subgraph compiles identically in both paths
+        agg = jax.lax.optimization_barrier(agg)
+        new_params, new_opt = jax.lax.optimization_barrier(
+            self._apply(agg, opt_state, params, x["step"]))
+        has = x["has"]
+        params = jax.tree.map(lambda o, n: jnp.where(has, n, o),
+                              params, new_params)
+        opt_state = jax.tree.map(lambda o, n: jnp.where(has, n, o),
+                                 opt_state, new_opt)
+        metrics = {"loss_sum": loss_sum, "wall": wall,
+                   "upload_bytes": up_bytes, "n_participants": n_part}
+        return (params, opt_state, tuple(new_efs)), metrics
+
+    def _chunk_fn(self, carry, xs, datas):
+        return jax.lax.scan(
+            functools.partial(self._round_body, datas=datas), carry, xs)
+
+    # -------------------------------------------------------------- host
+
+    def _host_masks(self, R: int, participation=None):
+        """The chunk's stacked participation: replay the eager path's
+        per-round ``default_rng([seed, step])`` sampling and float64
+        deadline comparison, entirely on host. Returns (per-round
+        bool-mask lists, per-round drop counts)."""
+        srv = self.server
+        parts, dropped = [], []
+        for r in range(R):
+            rng = np.random.default_rng([srv.seed, srv.step + r])
+            sampled = (srv._sample_participation(rng)
+                       if participation is None
+                       else [np.asarray(p, bool) for p in participation[r]])
+            n_dropped, cur = 0, []
+            for ci in range(len(srv.cohorts)):
+                part = np.asarray(sampled[ci], bool).copy()
+                if srv.straggler == "drop":
+                    late = self._times[ci]["T"] > srv.deadline
+                    n_dropped += int(np.sum(part & late))
+                    part &= ~late
+                cur.append(part)
+            parts.append(cur)
+            dropped.append(n_dropped)
+        return parts, dropped
+
+    def _run_chunk(self, R: int, participation=None) -> list[dict]:
+        srv = self.server
+        step0 = srv.step
+        parts, dropped = self._host_masks(R, participation)
+        xs = {
+            "part": tuple(
+                jnp.asarray(np.stack([parts[r][ci] for r in range(R)]),
+                            jnp.float32)
+                for ci in range(len(srv.cohorts))),
+            "step": jnp.asarray(np.arange(step0, step0 + R), jnp.int32),
+            "has": jnp.asarray([any(p.any() for p in parts[r])
+                                for r in range(R)]),
+        }
+        carry = (srv.params, srv.opt_state, self._ef_carry())
+        if not self._owns(carry):
+            # the carry is donated: never eat buffers the caller may still
+            # hold (e.g. the params pytree a paired eager run shares) —
+            # copy once, then chunks donate engine-produced state freely
+            carry = jax.tree.map(jnp.array, carry)
+        datas = tuple(c.data for c in srv.cohorts)
+        (params, opt_state, efs), metrics = self._chunk(carry, xs, datas)
+        self._last_out = (params, opt_state, efs)
+        srv.params, srv.opt_state = params, opt_state
+        srv.step = step0 + R
+        if srv.upload_quant is not None and srv.error_feedback:
+            for c, ef in zip(srv.cohorts, efs):
+                c.ef_buffer = ef
+        # the chunk's single device->host sync
+        m = jax.device_get(metrics)
+        recs = []
+        for r in range(R):
+            n_p = int(m["n_participants"][r])
+            rec = {
+                "step": step0 + r + 1,
+                "loss": (float(m["loss_sum"][r]) / n_p if n_p
+                         else float("nan")),
+                "n_participants": n_p,
+                "n_dropped": dropped[r],
+                "round_wall_time": (
+                    srv.deadline if srv.straggler == "drop" and dropped[r]
+                    else float(m["wall"][r]) if n_p else 0.0),
+                "total_upload_bytes": float(m["upload_bytes"][r]),
+            }
+            srv.history.append(rec)
+            recs.append(rec)
+        self.chunks_run += 1
+        self.rounds_run += R
+        return recs
+
+    def _owns(self, carry) -> bool:
+        """True iff every array in ``carry`` came out of this engine's
+        previous chunk (leaf-identity check), making it safe to donate."""
+        if self._last_out is None:
+            return False
+        prev = jax.tree.leaves(self._last_out)
+        cur = jax.tree.leaves(carry)
+        return len(prev) == len(cur) and all(a is b
+                                             for a, b in zip(prev, cur))
+
+    def _ef_carry(self) -> tuple:
+        """Per-cohort EF residuals for the scan carry. Real (stacked,
+        lazily zero-initialized) buffers only when upload quantization
+        with error feedback is on; otherwise leafless placeholders, so
+        the donated carry stays minimal."""
+        srv = self.server
+        if srv.upload_quant is None or not srv.error_feedback:
+            return tuple(() for _ in srv.cohorts)
+        return tuple(c.ef_buffer if c.ef_buffer is not None
+                     else _init_cohort_ef(c.size, srv.params)
+                     for c in srv.cohorts)
+
+    def run(self, rounds: int, participation=None) -> list[dict]:
+        """Advance the server ``rounds`` federated rounds through the
+        compiled scan, in chunks of ``chunk_rounds`` (0 = one chunk).
+        ``participation`` (optional, tests): one list of per-cohort bool
+        masks PER ROUND, overriding the sampled participation exactly
+        like ``CohortFLServer.round(participation=...)``. Returns the
+        new history records (also appended to ``server.history``)."""
+        if rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {rounds}")
+        if participation is not None and len(participation) != rounds:
+            raise ValueError(f"participation pins {len(participation)} "
+                             f"rounds for a {rounds}-round run")
+        chunk = self.chunk_rounds or rounds
+        recs, done = [], 0
+        while done < rounds:
+            r = min(chunk, rounds - done)
+            sl = (None if participation is None
+                  else participation[done:done + r])
+            recs += self._run_chunk(r, sl)
+            done += r
+        return recs
+
+
+def simulate_rounds(server, rounds: int, *, chunk_rounds: int = 0,
+                    agg: str = "sequential") -> list[dict]:
+    """Convenience: run ``rounds`` on ``server`` through a fresh
+    :class:`ScanEngine` (falls back to eager ``round()`` calls when the
+    server is not scannable). Returns the new history records."""
+    if _not_scannable(server):
+        return [server.round() for _ in range(rounds)]
+    return ScanEngine(server, chunk_rounds=chunk_rounds,
+                      agg=agg).run(rounds)

@@ -158,7 +158,13 @@ class FLServer:
 
     def round(self, client_batches: list[dict] | None = None) -> dict:
         """One federated round. client_batches defaults to full local data
-        (the paper's batch gradient descent)."""
+        (the paper's batch gradient descent).
+
+        Losses stay traced through the client loop and land on host with
+        ONE ``jax.device_get`` per round — the former per-client
+        ``float(loss)`` forced a device→host sync inside the loop,
+        serializing every dispatch behind the previous client's compute.
+        """
         loss_fn = self.model.loss_fn
         grads_list, masks_list, weights = [], [], []
         losses, comm = [], []
@@ -178,7 +184,7 @@ class FLServer:
             grads_list.append(g)
             masks_list.append(masks)
             weights.append(c.plan.weight)
-            losses.append(float(loss))
+            losses.append(loss)                  # traced; synced once below
             n_batch = next(iter(batch.values())).shape[0]
             comm.append(round_time(self.params, c.plan,
                                    PROFILES[c.profile_name], n_batch,
@@ -187,6 +193,8 @@ class FLServer:
         agg = hetero_aggregate(grads_list, masks_list, weights)
         _apply_update(self, agg, self.step)
         self.step += 1
+        # the round's single device->host sync (history schema unchanged)
+        losses = [float(x) for x in jax.device_get(losses)]
         rec = {"step": self.step, "loss": sum(losses) / len(losses),
                "client_losses": losses,
                "round_wall_time": max(c["T"] for c in comm),   # stragglers
@@ -263,53 +271,105 @@ def _upload_and_sum(updates, part, ef, fmt: str | None):
     return u_sum, ef
 
 
-@functools.lru_cache(maxsize=64)
-def _cohort_grad_fn(loss_fn: Callable, plan: CompressionPlan,
-                    upload_fmt: str | None):
-    """One fedsgd step for a whole cohort: vmap the straight-through
-    compressed-model gradient over the stacked client axis. Masks depend
-    only on (params, plan), so they are computed once per cohort, not per
-    client."""
-    def f(params, batches, part, ef):
-        def per_client(batch):
-            def loss_of(p):
-                cp, _ = compress_params(p, plan)
-                return loss_fn(cp, batch)
-            return jax.value_and_grad(loss_of)(params)
+def cohort_step_fn(loss_fn: Callable, plan: CompressionPlan, mode: str,
+                   local_steps: int, local_lr: float,
+                   upload_fmt: str | None) -> Callable:
+    """The raw (unjitted) one-cohort round step,
+    ``(params, batches, part, ef) -> (update_sum, masks, loss_sum, ef)``.
 
-        losses, grads = jax.vmap(per_client)(batches)
-        _, masks = compress_params(params, plan)
-        g_sum, ef = _upload_and_sum(grads, part, ef, upload_fmt)
-        return g_sum, masks, jnp.sum(part * losses), ef
-    return jax.jit(f)
+    fedsgd vmaps the straight-through compressed-model gradient over the
+    stacked client axis (masks depend only on (params, plan), so they are
+    computed once per cohort, not per client); fedavg vmaps the shared
+    ``_local_sgd`` body and uploads parameter deltas. This single
+    definition is shared VERBATIM by the eager per-cohort dispatches
+    (jitted per plan below) and the scan engine's fused round body
+    (``core/engine.py``) — the bit-identity between the two paths rests
+    on them tracing the same function.
+    """
+    if mode == "fedsgd" and upload_fmt is None:
+        # §Perf: the participation-weighted SUM of per-client gradients is
+        # the gradient of the participation-weighted loss sum (linearity),
+        # so differentiate ONE vmapped forward instead of vmapping
+        # value_and_grad: per-client grads force a batch axis through the
+        # whole backward (64 tiny dW gemms per layer); grad-of-sum
+        # collapses each into one contraction over the flattened batch
+        # (~1.5x per step on the 256-client bench fleet). Only valid when
+        # nothing downstream needs per-client gradients — upload
+        # quantization corrects per-client residuals, so it keeps the
+        # vmapped path below.
+        def f(params, batches, part, ef):
+            def tot(p):
+                cp, masks = compress_params(p, plan)
+                losses = jax.vmap(lambda b: loss_fn(cp, b))(batches)
+                return jnp.sum(part * losses), masks
+            (l_sum, masks), g_sum = jax.value_and_grad(
+                tot, has_aux=True)(params)
+            return g_sum, masks, l_sum, ef
+        return f
 
+    if mode == "fedsgd":
+        def f(params, batches, part, ef):
+            def per_client(batch):
+                def loss_of(p):
+                    cp, _ = compress_params(p, plan)
+                    return loss_fn(cp, batch)
+                return jax.value_and_grad(loss_of)(params)
 
-@functools.lru_cache(maxsize=64)
-def _cohort_local_train_fn(loss_fn: Callable, plan: CompressionPlan,
-                           local_steps: int, lr: float,
-                           upload_fmt: str | None):
-    """One fedavg step for a whole cohort: every client runs the shared
-    ``_local_sgd`` body, vmapped over the stacked client axis."""
-    local = _local_sgd(loss_fn, plan, local_steps, lr)
+            losses, grads = jax.vmap(per_client)(batches)
+            _, masks = compress_params(params, plan)
+            g_sum, ef = _upload_and_sum(grads, part, ef, upload_fmt)
+            return g_sum, masks, jnp.sum(part * losses), ef
+        return f
+
+    local = _local_sgd(loss_fn, plan, local_steps, local_lr)
 
     def f(params, batches, part, ef):
         cp0, masks = compress_params(params, plan)
         losses, deltas = jax.vmap(lambda batch: local(cp0, batch))(batches)
         d_sum, ef = _upload_and_sum(deltas, part, ef, upload_fmt)
         return d_sum, masks, jnp.sum(part * losses), ef
-    return jax.jit(f)
+    return f
+
+
+@functools.lru_cache(maxsize=64)
+def _cohort_step_jit(loss_fn: Callable, plan: CompressionPlan, mode: str,
+                     local_steps: int, local_lr: float,
+                     upload_fmt: str | None):
+    """Jitted-and-cached :func:`cohort_step_fn` — the eager runtimes'
+    per-plan dispatch unit (fedavg's local_steps/lr are ignored by the
+    fedsgd body but kept in the key for one uniform cache)."""
+    return jax.jit(cohort_step_fn(loss_fn, plan, mode, local_steps,
+                                  local_lr, upload_fmt))
+
+
+@functools.lru_cache(maxsize=64)
+def _apply_fns(optimizer, mode: str, server_lr: float):
+    """``(jitted, raw)`` server-side model update
+    ``(agg, opt_state, params, step) -> (params, opt_state)``: fedavg
+    applies the aggregated delta with the server lr (no optimizer stats),
+    fedsgd feeds the aggregated gradient to the optimizer.
+
+    The eager runtimes dispatch the JITTED version — one compiled call
+    instead of O(#leaves) op-by-op dispatches per round — and the scan
+    engine inlines the RAW version between optimization barriers, so both
+    paths compile the same update subgraph and stay bit-identical
+    (``Optimizer`` is a frozen dataclass: hashable cache key)."""
+    if mode == "fedavg":
+        def f(agg, opt_state, params, step):
+            del step
+            return (jax.tree.map(lambda p, d: p + server_lr * d,
+                                 params, agg), opt_state)
+    else:
+        def f(agg, opt_state, params, step):
+            return optimizer.update(agg, opt_state, params, step=step)
+    return jax.jit(f), f
 
 
 def _apply_update(server, agg, step: int) -> None:
-    """The server-side model update shared by all three runtimes: fedavg
-    applies the aggregated delta with the server lr (no optimizer stats),
-    fedsgd feeds the aggregated gradient to the optimizer."""
-    if server.mode == "fedavg":
-        server.params = jax.tree.map(
-            lambda p, d: p + server.server_lr * d, server.params, agg)
-    else:
-        server.params, server.opt_state = server.optimizer.update(
-            agg, server.opt_state, server.params, step=step)
+    """The server-side model update shared by all three eager runtimes."""
+    fn, _ = _apply_fns(server.optimizer, server.mode, server.server_lr)
+    server.params, server.opt_state = fn(agg, server.opt_state,
+                                         server.params, step)
 
 
 def _cohort_upload(server, cohort: Cohort, batches, part, params):
@@ -323,13 +383,9 @@ def _cohort_upload(server, cohort: Cohort, batches, part, params):
         ef = _init_cohort_ef(cohort.size, params)
     elif server.upload_quant is None:
         ef = ()                     # leafless placeholder pytree
-    loss_fn = server.model.loss_fn
-    if server.mode == "fedsgd":
-        fn = _cohort_grad_fn(loss_fn, cohort.plan, server.upload_quant)
-    else:
-        fn = _cohort_local_train_fn(loss_fn, cohort.plan,
-                                    server.local_steps, server.local_lr,
-                                    server.upload_quant)
+    fn = _cohort_step_jit(server.model.loss_fn, cohort.plan, server.mode,
+                          server.local_steps, server.local_lr,
+                          server.upload_quant)
     g_sum, masks, l_sum, new_ef = fn(params, batches,
                                      jnp.asarray(part, jnp.float32), ef)
     if server.upload_quant is not None and server.error_feedback:
@@ -373,6 +429,9 @@ class CohortFLServer:
     seed: int = 0
     step: int = 0
     history: list = field(default_factory=list)
+    # per-(cohort, n_batch) Eq. (1) memo: the fleet, plans and param
+    # SHAPES are static per server, so times never change across rounds
+    _times_cache: dict = field(default_factory=dict, init=False, repr=False)
 
     def __post_init__(self):
         if self.opt_state is None:
@@ -394,6 +453,21 @@ class CohortFLServer:
     @property
     def n_clients(self) -> int:
         return sum(c.size for c in self.cohorts)
+
+    def cohort_times(self, ci: int, n_batch: int) -> dict:
+        """Cohort ``ci``'s Eq. (1) time table at ``n_batch`` samples,
+        memoized per server (arrays are shared — treat as read-only).
+        Also the scan engine's source of deadline/wall-clock constants."""
+        key = (ci, n_batch)
+        times = self._times_cache.get(key)
+        if times is None:
+            cohort = self.cohorts[ci]
+            times = cohort_round_time(
+                self.params, cohort.plan,
+                [PROFILES[p] for p in cohort.profile_names], n_batch,
+                self.local_steps if self.mode == "fedavg" else 1)
+            self._times_cache[key] = times
+        return times
 
     def _sample_participation(self, rng) -> list[np.ndarray]:
         """Uniform without-replacement sampling of
@@ -432,10 +506,7 @@ class CohortFLServer:
             batches = (cohort.data if cohort_batches is None
                        else cohort_batches[ci])
             n_batch = next(iter(batches.values())).shape[1]
-            times = cohort_round_time(
-                self.params, cohort.plan,
-                [PROFILES[p] for p in cohort.profile_names], n_batch,
-                self.local_steps if self.mode == "fedavg" else 1)
+            times = self.cohort_times(ci, n_batch)
             part = part.copy()
             if self.straggler == "drop":
                 late = times["T"] > self.deadline

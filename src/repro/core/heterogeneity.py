@@ -8,6 +8,7 @@ the named device classes.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 from repro.core.compression import CompressionPlan, payload_bits
@@ -49,9 +50,7 @@ def round_time(params, plan: CompressionPlan, profile: DeviceProfile,
     """Paper Eq. (1), per round, in seconds. Compression reduces T_local
     (density·N active params), T_upload (compressed gradient), and
     T_download (compressed model)."""
-    import jax
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    bits = payload_bits(params, plan)
+    n_params, bits = _payload_stats(params, plan)
     t_local = local_steps * train_flops(n_params * plan.density, n_samples) / profile.flops
     t_up = bits / profile.up_bps
     t_global = train_flops(n_params, 1) / server_flops     # aggregation pass
@@ -60,6 +59,37 @@ def round_time(params, plan: CompressionPlan, profile: DeviceProfile,
             "T_download": t_down,
             "T": t_local + t_up + t_global + t_down,
             "payload_bytes": bits / 8}
+
+
+def _payload_stats(params, plan: CompressionPlan) -> tuple[int, float]:
+    """(n_params, payload bits) — the only way ``params`` enters Eq. (1).
+    Both depend on the tree's SHAPES, never its values."""
+    import jax
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    return n_params, payload_bits(params, plan)
+
+
+@functools.lru_cache(maxsize=4096)
+def _eq1_cohort_cached(n_params: int, bits: float, density: float,
+                       profiles: tuple[DeviceProfile, ...], ns_key,
+                       local_steps: int, server_flops: float) -> dict:
+    """The arithmetic core of :func:`cohort_round_time`, memoized on its
+    fully-hashable inputs. Static fleets hit this every round after the
+    first — the eager cohort runtime used to rebuild these arrays from
+    scratch per round. Returned arrays are shared; treat as read-only."""
+    import numpy as np
+    flops = np.array([p.flops for p in profiles], np.float64)
+    up = np.array([p.up_bps for p in profiles], np.float64)
+    down = np.array([p.down_bps for p in profiles], np.float64)
+    ns = np.broadcast_to(np.asarray(ns_key, np.float64), flops.shape)
+    t_local = local_steps * train_flops(n_params * density, ns) / flops
+    t_up = bits / up
+    t_global = np.full_like(flops, train_flops(n_params, 1) / server_flops)
+    t_down = bits / down
+    return {"T_local": t_local, "T_upload": t_up, "T_global": t_global,
+            "T_download": t_down,
+            "T": t_local + t_up + t_global + t_down,
+            "payload_bytes": np.full_like(flops, bits / 8)}
 
 
 def cohort_round_time(params, plan: CompressionPlan,
@@ -73,23 +103,19 @@ def cohort_round_time(params, plan: CompressionPlan,
     touches the accelerator, so the cohort runtime can apply deadline
     policies without a device sync. Returns a dict of per-client arrays
     with the same keys as :func:`round_time`.
+
+    The arithmetic is cached per (plan, profiles, n_samples, local_steps)
+    — see :func:`_eq1_cohort_cached`; only the ``params`` tree walk (a
+    shape-only statistic) is paid per call. Returned arrays are shared
+    between calls with the same key: treat them as read-only.
     """
-    import jax
     import numpy as np
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    bits = payload_bits(params, plan)
-    flops = np.array([p.flops for p in profiles], np.float64)
-    up = np.array([p.up_bps for p in profiles], np.float64)
-    down = np.array([p.down_bps for p in profiles], np.float64)
-    ns = np.broadcast_to(np.asarray(n_samples, np.float64), flops.shape)
-    t_local = local_steps * train_flops(n_params * plan.density, ns) / flops
-    t_up = bits / up
-    t_global = np.full_like(flops, train_flops(n_params, 1) / server_flops)
-    t_down = bits / down
-    return {"T_local": t_local, "T_upload": t_up, "T_global": t_global,
-            "T_download": t_down,
-            "T": t_local + t_up + t_global + t_down,
-            "payload_bytes": np.full_like(flops, bits / 8)}
+    n_params, bits = _payload_stats(params, plan)
+    ns_key = (float(n_samples) if np.ndim(n_samples) == 0
+              else tuple(float(x) for x in np.asarray(n_samples).ravel()))
+    return dict(_eq1_cohort_cached(n_params, bits, plan.density,
+                                   tuple(profiles), ns_key, local_steps,
+                                   server_flops))
 
 
 def memory_overhead(params, plan: CompressionPlan, batch: int,

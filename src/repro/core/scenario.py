@@ -469,21 +469,51 @@ def _default_bundle(model, optimizer, params, init_seed: int):
     return model, optimizer, params
 
 
+ENGINES = ("eager", "scan", "scan_pallas")
+
+
 def simulate(scenario: FLScenario, rounds: int, *, model=None,
              optimizer=None, params=None, clients: list | None = None,
-             shards: list | None = None, init_seed: int = 0) -> RunResult:
+             shards: list | None = None, init_seed: int = 0,
+             engine: str = "eager", chunk_rounds: int | None = None) -> RunResult:
     """The unified driver: build the scenario's runtime and advance it
     ``rounds`` federated rounds (sync) or aggregation windows (async).
-    With no model/optimizer/params it runs the paper's MLP task."""
+    With no model/optimizer/params it runs the paper's MLP task.
+
+    ``engine`` selects the execution strategy for cohort-runtime sync
+    scenarios (DESIGN.md §12):
+
+    - ``"eager"``: one ``round()`` call per round (O(#plans) dispatches +
+      one device→host sync each) — the default, and the semantics.
+    - ``"scan"``: compile chunks of ``chunk_rounds`` rounds (default: all
+      of them) into ONE donated-buffer ``lax.scan`` program; params /
+      opt_state trajectories are bit-identical to ``"eager"``.
+    - ``"scan_pallas"``: ``"scan"`` with ≥2-D aggregation leaves routed
+      through the fused Pallas ``grad_aggregate`` kernel (parity to
+      tolerance, not bitwise — the fused reduction reorders sums).
+
+    The async runtime (its windows are event-driven, not round-shaped)
+    and the per-client loop fall back to eager regardless of ``engine``.
+    """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     model, optimizer, params = _default_bundle(model, optimizer, params,
                                                init_seed)
     srv = build_server(scenario, model, optimizer, params,
                        clients=clients, shards=shards)
-    advance = srv.step if isinstance(scenario.timing, AsyncBuffered) else srv.round
-    for _ in range(rounds):
-        advance()
+    if engine != "eager" and scenario.runtime == "cohort" \
+            and not isinstance(scenario.timing, AsyncBuffered):
+        from repro.core.engine import ScanEngine
+        ScanEngine(srv, chunk_rounds=chunk_rounds or 0,
+                   agg="pallas" if engine == "scan_pallas"
+                   else "sequential").run(rounds)
+    else:
+        advance = (srv.step if isinstance(scenario.timing, AsyncBuffered)
+                   else srv.round)
+        for _ in range(rounds):
+            advance()
     return RunResult(scenario=scenario,
                      records=tuple(RoundRecord.from_history(h)
                                    for h in srv.history),

@@ -13,6 +13,7 @@ the internal execution layer the factory assembles:
 """
 from repro.core.compression import (CompressionPlan, DEVICE_TIERS,
                                     default_tier_plans)  # noqa: F401
+from repro.core.engine import ScanEngine, simulate_rounds  # noqa: F401
 from repro.core.federated import (AsyncFLServer, Client, Cohort,
                                   CohortFLServer, FLServer,
                                   build_cohorts)  # noqa: F401

@@ -1,15 +1,21 @@
 """Pallas kernel: fused mask-aware heterogeneous gradient aggregation —
 
-    out[i] = sum_t w[t]*m[t,i]*g[t,i] / max(sum_t w[t]*m[t,i], eps)
+    out[i] = sum_t wn[t]*m[t,i]*g[t,i] / max(sum_t wd[t]*m[t,i], eps)
 
 This is the server-side inner loop of the paper's architecture. Fusing the
 numerator, denominator and divide into one VMEM pass reads g and m exactly
 once from HBM (vs. 3 passes for the naive num/den/divide composition) —
 the aggregation is strictly memory-bound, so passes == time.
 
+Separate numerator/denominator weight columns express the cohort
+accumulators of ``core/aggregation.py`` (DESIGN.md §9): a cohort
+contributes ``w·m·Σ_part g`` to the numerator but ``w·n_part·m`` to the
+denominator, so ``wn = w`` and ``wd = w·n_part``. With ``wd == wn`` this
+is exactly the classic per-tier form.
+
 Tiling: grid over the flattened parameter axis; each step loads an
 (n_tiers, bn) tile of g and m (tier count is small and static) and the
-(n_tiers, 1) weight column, writes a (1, bn) output tile.
+(n_tiers, 1) weight columns, writes a (1, bn) output tile.
 """
 from __future__ import annotations
 
@@ -20,22 +26,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _agg_kernel(g_ref, m_ref, w_ref, o_ref, *, eps: float):
+def _agg_kernel(g_ref, m_ref, wn_ref, wd_ref, o_ref, *, eps: float):
     g = g_ref[...].astype(jnp.float32)          # (T, bn)
     m = m_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)          # (T, 1)
-    num = jnp.sum(w * m * g, axis=0)
-    den = jnp.sum(w * m, axis=0)
+    wn = wn_ref[...].astype(jnp.float32)        # (T, 1)
+    wd = wd_ref[...].astype(jnp.float32)        # (T, 1)
+    num = jnp.sum(wn * m * g, axis=0)
+    den = jnp.sum(wd * m, axis=0)
     o_ref[...] = (num / jnp.maximum(den, eps))[None, :].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "eps", "interpret"))
-def grad_aggregate_raw(g: jax.Array, m: jax.Array, w: jax.Array, *,
+def grad_aggregate_raw(g: jax.Array, m: jax.Array, w: jax.Array,
+                       w_den: jax.Array | None = None, *,
                        block: int = 1024, eps: float = 1e-8,
                        interpret: bool = False) -> jax.Array:
-    """g, m: (T, N); w: (T, 1). N % block == 0. Returns (1, N)."""
+    """g, m: (T, N); w, w_den: (T, 1). N % block == 0. Returns (1, N).
+    ``w_den`` defaults to ``w`` (the homogeneous-count form)."""
     t, n = g.shape
     bn = min(block, n)
+    if w_den is None:
+        w_den = w
     return pl.pallas_call(
         functools.partial(_agg_kernel, eps=eps),
         grid=(n // bn,),
@@ -43,8 +54,9 @@ def grad_aggregate_raw(g: jax.Array, m: jax.Array, w: jax.Array, *,
             pl.BlockSpec((t, bn), lambda i: (0, i)),
             pl.BlockSpec((t, bn), lambda i: (0, i)),
             pl.BlockSpec((t, 1), lambda i: (0, 0)),
+            pl.BlockSpec((t, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, bn), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, n), g.dtype),
         interpret=interpret,
-    )(g, m, w)
+    )(g, m, w, w_den)

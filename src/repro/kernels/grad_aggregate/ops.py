@@ -18,8 +18,14 @@ def _auto_interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
 def grad_aggregate(g, m, w, eps: float = 1e-8,
-                   interpret: bool | None = None):
-    """g, m: (T, ...) stacked tier gradients/masks; w: (T,). Returns (...)."""
+                   interpret: bool | None = None, *, w_den=None):
+    """g, m: (T, ...) stacked tier gradients/masks; w: (T,). Returns (...).
+
+    ``w_den`` (T,), keyword-only (``eps`` keeps its positional slot):
+    separate denominator weights — the cohort accumulator form
+    ``Σ w·m·g / max(Σ w_den·m, eps)`` with ``w_den = w·n_participants``
+    (see kernel docstring). Defaults to ``w``.
+    """
     if interpret is None:
         interpret = _auto_interpret()
     import math
@@ -33,7 +39,8 @@ def grad_aggregate(g, m, w, eps: float = 1e-8,
     if pad:
         g2 = jnp.pad(g2, ((0, 0), (0, pad)))
         m2 = jnp.pad(m2, ((0, 0), (0, pad)))
-    out = grad_aggregate_raw(g2, m2, w.reshape(t, 1), eps=eps,
+    wd = None if w_den is None else w_den.reshape(t, 1)
+    out = grad_aggregate_raw(g2, m2, w.reshape(t, 1), wd, eps=eps,
                              interpret=interpret)[0]
     if pad:
         out = out[:n]

@@ -6,9 +6,12 @@ import jax.numpy as jnp
 
 
 def grad_aggregate_ref(g: jax.Array, m: jax.Array, w: jax.Array,
-                       eps: float = 1e-8) -> jax.Array:
-    """g, m: (T, N); w: (T,) or (T, 1). Returns (N,)."""
+                       eps: float = 1e-8, *,
+                       w_den: jax.Array | None = None) -> jax.Array:
+    """g, m: (T, N); w, w_den: (T,) or (T, 1). Returns (N,).
+    ``w_den`` (keyword-only) defaults to ``w`` (see the kernel docstring)."""
     w = w.reshape(-1, 1).astype(jnp.float32)
+    wd = w if w_den is None else w_den.reshape(-1, 1).astype(jnp.float32)
     num = jnp.sum(w * m.astype(jnp.float32) * g.astype(jnp.float32), axis=0)
-    den = jnp.sum(w * m.astype(jnp.float32), axis=0)
+    den = jnp.sum(wd * m.astype(jnp.float32), axis=0)
     return (num / jnp.maximum(den, eps)).astype(g.dtype)

@@ -1,0 +1,285 @@
+"""Scan engine (DESIGN.md §12): trajectories bit-identical to the eager
+cohort path under pinned participation, for every scenario family the
+engine compiles — plus the fused Pallas aggregation backend's parity
+with ``aggregation.finalize`` on cohort-shaped accumulators."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs.paper_mlp import config
+from repro.core.aggregation import accumulate_cohort, finalize, zeros_like_acc
+from repro.core.engine import ScanEngine, simulate_rounds
+from repro.core.federated import FLServer
+from repro.core.scenario import (AsyncBuffered, FleetSpec, FLScenario,
+                                 LocalTraining, ParticipationPolicy,
+                                 SyncDrop, UploadPolicy, build_server,
+                                 simulate)
+from repro.kernels.grad_aggregate import grad_aggregate
+from repro.models import mlp
+
+KEY = jax.random.PRNGKey(7)
+MODEL = types.SimpleNamespace(loss_fn=mlp.loss_fn)
+TIERS = ("hub", "high", "mid", "low")
+
+
+def _spec(n=16, **kw):
+    return FleetSpec.cycling(TIERS, n, samples_per_client=16, **kw)
+
+
+def _bit_identical(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(bool(jnp.all(x == y))
+                                      for x, y in zip(la, lb))
+
+
+SCENARIOS = {
+    "sync_wait_partial": FLScenario(
+        fleet=_spec(),
+        participation=ParticipationPolicy(fraction=0.5, seed=11)),
+    "sync_drop": FLScenario(fleet=_spec(), timing=SyncDrop(deadline=0.004)),
+    "fedavg": FLScenario(
+        fleet=_spec(8),
+        local=LocalTraining(mode="fedavg", local_steps=3, local_lr=0.5)),
+    "quant_ef": FLScenario(
+        fleet=_spec(8),
+        upload=UploadPolicy(quant="fp8_e4m3", error_feedback=True),
+        participation=ParticipationPolicy(fraction=0.6, seed=5)),
+}
+
+
+@pytest.mark.parametrize("name", [
+    "sync_wait_partial",
+    "sync_drop",
+    pytest.param("fedavg", marks=pytest.mark.slow),
+    pytest.param("quant_ef", marks=pytest.mark.slow),
+])
+def test_scan_engine_bit_identical_to_eager(name):
+    """The acceptance bar: identical seeds pin identical participation,
+    and the compiled chunk must then reproduce the eager ``simulate()``
+    params AND opt_state trajectories to the bit — including a chunk
+    size that does not divide the round count."""
+    scenario = SCENARIOS[name]
+    eager = simulate(scenario, 7)
+    scan = simulate(scenario, 7, engine="scan", chunk_rounds=3)
+    assert _bit_identical(eager.params, scan.params)
+    assert _bit_identical(eager.opt_state, scan.opt_state)
+    assert [r.loss for r in eager.records] == [r.loss for r in scan.records]
+    assert ([r.n_participants for r in eager.records]
+            == [r.n_participants for r in scan.records])
+    assert ([r.n_dropped for r in eager.records]
+            == [r.n_dropped for r in scan.records])
+
+
+@pytest.mark.slow
+def test_scan_engine_momentum_opt_state_trajectory():
+    """Stateful optimizers ride the donated carry: momentum buffers must
+    track the eager path bit-for-bit across chunk boundaries."""
+    scenario = SCENARIOS["sync_wait_partial"]
+    kw = dict(model=MODEL, optimizer=optim.momentum(0.5),
+              params=mlp.init(KEY, config()))
+    eager = simulate(scenario, 6, **kw)
+    scan = simulate(scenario, 6, engine="scan", chunk_rounds=2, **kw)
+    assert _bit_identical(eager.opt_state, scan.opt_state)
+    assert _bit_identical(eager.params, scan.params)
+
+
+@pytest.mark.slow
+def test_scan_engine_adam_parity():
+    """Known limit (engine docstring): Adam's param update compiles with
+    a one-ulp difference inside the scan (m/v moments stay exact), so
+    Adam is parity, not bitwise."""
+    scenario = SCENARIOS["sync_wait_partial"]
+    kw = dict(model=MODEL, optimizer=optim.adam(0.05),
+              params=mlp.init(KEY, config()))
+    eager = simulate(scenario, 6, **kw)
+    scan = simulate(scenario, 6, engine="scan", chunk_rounds=3, **kw)
+    for a, b in zip(jax.tree.leaves((eager.params, eager.opt_state)),
+                    jax.tree.leaves((scan.params, scan.opt_state))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-6)
+
+
+def test_scan_engine_explicitly_pinned_participation():
+    """Explicit per-round masks (the test hook the eager round exposes)
+    drive the engine to the same trajectory, including a round in which
+    NOBODY participates (the carry must pass through untouched)."""
+    scenario = FLScenario(fleet=_spec(8))
+    params = mlp.init(KEY, config())
+    rng = np.random.default_rng(0)
+    srv_e = build_server(scenario, MODEL, optim.sgd(1.0), params)
+    srv_s = build_server(scenario, MODEL, optim.sgd(1.0), params)
+    n_per = [c.size for c in srv_e.cohorts]
+    pinned = [[rng.random(n) < 0.5 for n in n_per] for _ in range(4)]
+    pinned[2] = [np.zeros(n, bool) for n in n_per]      # empty round
+    for r in range(4):
+        srv_e.round(participation=pinned[r])
+    ScanEngine(srv_s).run(4, participation=pinned)
+    assert _bit_identical(srv_e.params, srv_s.params)
+    assert np.isnan(srv_e.history[2]["loss"])
+    assert np.isnan(srv_s.history[2]["loss"])
+    assert ([h["n_participants"] for h in srv_e.history]
+            == [h["n_participants"] for h in srv_s.history])
+
+
+def test_scan_engine_resumes_across_runs():
+    """Two engine runs of 3+4 rounds equal one eager run of 7: the
+    server's step counter (and with it the participation RNG stream)
+    advances through the engine."""
+    scenario = SCENARIOS["sync_wait_partial"]
+    eager = simulate(scenario, 7)
+    srv = build_server(scenario, *_bundle())
+    eng = ScanEngine(srv)
+    eng.run(3)
+    eng.run(4)
+    assert _bit_identical(eager.params, srv.params)
+    assert eng.chunks_run == 2 and eng.rounds_run == 7
+
+
+def test_scan_engine_does_not_eat_caller_buffers():
+    """The donated carry must never invalidate params the caller still
+    holds: running the engine, then an eager server from the SAME params
+    pytree, must work and agree."""
+    scenario = FLScenario(fleet=_spec(8))
+    params = mlp.init(KEY, config())
+    scan = simulate(scenario, 3, engine="scan", params=params,
+                    model=MODEL, optimizer=optim.sgd(1.0))
+    eager = simulate(scenario, 3, params=params, model=MODEL,
+                     optimizer=optim.sgd(1.0))
+    assert _bit_identical(eager.params, scan.params)
+
+
+def test_scan_engine_record_schema_matches_eager():
+    scenario = SCENARIOS["sync_drop"]
+    eager = simulate(scenario, 3)
+    scan = simulate(scenario, 3, engine="scan")
+    for he, hs in zip(eager.server.history, scan.server.history):
+        assert set(he) == set(hs)
+        assert he["round_wall_time"] == pytest.approx(
+            hs["round_wall_time"], rel=1e-6)
+        assert he["total_upload_bytes"] == pytest.approx(
+            hs["total_upload_bytes"], rel=1e-6)
+
+
+def test_async_and_client_runtimes_fall_back_to_eager():
+    asy = FLScenario(fleet=_spec(8),
+                     timing=AsyncBuffered(buffer_size=8, staleness_exp=0.0))
+    res = simulate(asy, 3, engine="scan")
+    assert res.final.t is not None                  # async ran (eagerly)
+    cli = FLScenario(fleet=FleetSpec(tiers=TIERS, n_samples=64),
+                     runtime="client")
+    res = simulate(cli, 2, engine="scan")
+    assert res.final.client_losses is not None      # per-client loop ran
+    with pytest.raises(TypeError, match="not cohort-vectorized"):
+        ScanEngine(FLServer(model=MODEL, optimizer=optim.sgd(1.0),
+                            clients=cli.fleet.build_clients(),
+                            params=mlp.init(KEY, config())))
+
+
+def test_simulate_rounds_helper_falls_back():
+    cli = FLScenario(fleet=FleetSpec(tiers=TIERS, n_samples=64),
+                     runtime="client")
+    srv = build_server(cli, *_bundle())
+    recs = simulate_rounds(srv, 2)
+    assert len(recs) == 2 and len(srv.history) == 2
+
+
+def test_scan_engine_rejects_bad_args():
+    srv = build_server(FLScenario(fleet=_spec(8)), *_bundle())
+    with pytest.raises(ValueError, match="agg"):
+        ScanEngine(srv, agg="magic")
+    with pytest.raises(ValueError, match="chunk_rounds"):
+        ScanEngine(srv, chunk_rounds=-1)
+    eng = ScanEngine(srv)
+    with pytest.raises(ValueError, match="rounds"):
+        eng.run(0)
+    with pytest.raises(ValueError, match="participation"):
+        eng.run(2, participation=[[np.ones(4, bool)]])
+
+
+def _bundle():
+    """The same (model, optimizer, params) triple ``simulate()`` defaults
+    to — so direct ``build_server`` runs are comparable to it."""
+    return MODEL, optim.sgd(1.0), mlp.init(jax.random.PRNGKey(0), config())
+
+
+# ------------------------------------------------- pallas aggregation
+
+@pytest.mark.parametrize("name", [
+    "sync_wait_partial",
+    pytest.param("sync_drop", marks=pytest.mark.slow),
+])
+def test_scan_pallas_engine_parity(name):
+    """The fused-kernel backend reorders the tier-axis reduction, so it
+    is parity (1e-6 on f32 params), not bitwise."""
+    scenario = SCENARIOS[name]
+    eager = simulate(scenario, 5)
+    pallas = simulate(scenario, 5, engine="scan_pallas")
+    for a, b in zip(jax.tree.leaves(eager.params),
+                    jax.tree.leaves(pallas.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-5)
+
+
+def test_grad_aggregate_matches_finalize_on_cohort_accumulators():
+    """Satellite parity test: the two-weight kernel form
+    ``Σ w·m·g / max(Σ w·count·m, eps)`` against the reference
+    ``accumulate_cohort`` → ``finalize`` chain, on cohort-shaped
+    pytree accumulators INCLUDING the scalar-denominator leaves that
+    1-D params produce."""
+    key = jax.random.PRNGKey(3)
+    params = mlp.init(key, config())
+    n_cohorts = 4
+    rng = np.random.default_rng(0)
+    weights = [1.0, 2.0, 0.5, 1.5]
+    counts = [3.0, 1.0, 4.0, 2.0]
+    g_sums, masks_list = [], []
+    for t in range(n_cohorts):
+        k1, k2, key = jax.random.split(key, 3)
+        g_sums.append(jax.tree.map(
+            lambda p: jax.random.normal(k1, p.shape) * counts[t], params))
+        masks_list.append(jax.tree.map(
+            lambda p: (jnp.asarray(rng.random(p.shape) < 0.7,
+                                   jnp.float32) if p.ndim >= 2
+                       else jnp.float32(1.0)), params))
+
+    acc = zeros_like_acc(params)
+    for t in range(n_cohorts):
+        acc = accumulate_cohort(acc, g_sums[t], masks_list[t],
+                                jnp.float32(weights[t]),
+                                jnp.float32(counts[t]))
+    ref = finalize(acc)
+
+    wn = jnp.asarray(weights, jnp.float32)
+    wd = jnp.asarray([w * c for w, c in zip(weights, counts)], jnp.float32)
+    leaves_ref = jax.tree.leaves(ref)
+    leaves_g = [jax.tree.leaves(g) for g in g_sums]
+    leaves_m = [jax.tree.leaves(m) for m in masks_list]
+    checked_scalar_den = checked_full = 0
+    for li, r in enumerate(leaves_ref):
+        G = jnp.stack([lg[li] for lg in leaves_g])
+        M = jnp.stack([lm[li] for lm in leaves_m])
+        out = grad_aggregate(G, M, wn, w_den=wd)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                                   rtol=0, atol=2e-6)
+        if jax.tree.leaves(params)[li].ndim < 2:
+            checked_scalar_den += 1         # broadcast (T,)-mask column
+        else:
+            checked_full += 1
+    assert checked_scalar_den and checked_full
+
+
+def test_grad_aggregate_w_den_defaults_to_w():
+    """Backwards compatibility: omitting w_den is the classic per-tier
+    form (den uses the same weights as num)."""
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(3, 40)),
+                    jnp.float32)
+    m = jnp.asarray(np.random.default_rng(1).random((3, 40)) < 0.5,
+                    jnp.float32)
+    w = jnp.asarray([1.0, 2.0, 0.5], jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(grad_aggregate(g, m, w)),
+        np.asarray(grad_aggregate(g, m, w, w_den=w)))
