@@ -23,6 +23,12 @@ Fleets and runtimes come from the declarative scenario API (DESIGN.md
   staleness-aware runtime (DESIGN.md §10) to reach the sync-wait
   baseline's round-50 loss on the heterogeneous hub/mid/low 256-client /
   4-plan fleet, derived = sim-time speedup + staleness profile.
+- fl/submodel_{path}_{n}: masked emulation vs structured width slicing
+  (DESIGN.md §13) at matched tier budget — one jitted cohort STEP over
+  64 clients on a 0.25 plan and a 256-wide MLP (wide enough that matmul
+  FLOPs, not dispatch, dominate). The width-sliced step must be >=2x
+  faster than the masked full-shape step, and its Eq. (1) payload is the
+  exact sliced parameter count; derived = loss, payload bytes, speedup.
 - fl/eq1_{tier}: the paper's Eq. (1) analytic round time per device tier
   for the granite-3-2b model, derived = component breakdown.
 - fl/tierstep_{arch}: one datacenter tier-scanned hetero train step
@@ -168,6 +174,60 @@ def _engine_rows() -> list[tuple]:
     return rows
 
 
+SUBMODEL_N = 64
+SUBMODEL_HIDDEN = 256
+SUBMODEL_STEPS = 20
+
+
+def _submodel_rows() -> list[tuple]:
+    """Structured width slicing vs masked emulation (the ISSUE-5
+    acceptance config): the device-side cohort step — the unit a tier
+    actually pays per round — on one 64-client 0.25-budget cohort over a
+    256-wide MLP. The masked step runs full-shape matmuls plus the
+    magnitude-threshold bisection; the width-sliced step runs the dense
+    (ceil(0.25*d_in), ceil(0.25*d_out)) sub-model, ~1/16th the matmul
+    FLOPs. Eq. (1) payload comes from the exact sliced counts."""
+    import jax.numpy as jnp
+
+    from repro.configs.paper_mlp import MLPConfig
+    from repro.core.compression import CompressionPlan
+    from repro.core.federated import _cohort_step_jit
+    from repro.data import make_gaussian_dataset, partition_iid, stack_shards
+
+    cfg = MLPConfig(name="paper-mlp-wide", hidden=SUBMODEL_HIDDEN,
+                    num_layers=4)
+    params = mlp.init(KEY, cfg)
+    data = make_gaussian_dataset(KEY, SUBMODEL_N * 16)
+    batches = stack_shards(partition_iid(KEY, data, SUBMODEL_N))
+    part = jnp.ones((SUBMODEL_N,), jnp.float32)
+    masked = CompressionPlan("low25", density=0.25, quant="fp8_e5m2")
+    plans = {"masked": masked, "width": masked.as_width_sliced()}
+    payload = {path: round_time(params, plan, PROFILES["low"],
+                                16)["payload_bytes"]
+               for path, plan in plans.items()}
+    rows, times = [], {}
+    for path, plan in plans.items():
+        fn = _cohort_step_jit(MLP_MODEL.loss_fn, plan, "fedsgd", 5, 0.1,
+                              None)
+        g, _, l_sum, _ = fn(params, batches, part, ())      # compile
+        jax.block_until_ready(g)
+        t0 = time.perf_counter()
+        for _ in range(SUBMODEL_STEPS):
+            g, _, l_sum, _ = fn(params, batches, part, ())
+        jax.block_until_ready(g)
+        times[path] = (time.perf_counter() - t0) / SUBMODEL_STEPS * 1e6
+        derived = (f"loss={float(l_sum) / SUBMODEL_N:.4f};"
+                   f"payload_bytes={payload[path]:.0f}")
+        if path == "width":
+            derived += (f";speedup_vs_masked="
+                        f"{times['masked'] / times['width']:.1f}x;"
+                        f"payload_vs_masked="
+                        f"{payload['masked'] / payload['width']:.1f}x")
+        rows.append((f"fl/submodel_{path}_{SUBMODEL_N}", times[path],
+                     derived))
+    return rows
+
+
 ASYNC_N = 256
 ASYNC_ROUNDS = 50
 ASYNC_BUFFER = 64
@@ -238,6 +298,7 @@ def run() -> list[tuple]:
     rows += _api_overhead_rows()
     rows += _engine_rows()
     rows += _async_rows()
+    rows += _submodel_rows()
 
     gcfg = get_smoke_config("granite-3-2b")
     gmodel = get_model(gcfg)
@@ -288,17 +349,22 @@ def _commit_hash() -> str:
 
 def emit_json(path: str) -> dict:
     """The machine-readable perf record CI tracks from PR 4 on: the
-    fl/engine_* rows (the ISSUE-4 acceptance numbers) plus commit hash,
-    written to ``path``. Runs ONLY the engine section — cheap enough for
-    every CI run; ``make bench-fl`` is the local entry point."""
+    fl/engine_* rows (the ISSUE-4 acceptance numbers) and, from PR 5,
+    the fl/submodel_* rows (masked vs width-sliced cohort step), plus
+    commit hash, written to ``path``. Runs ONLY those two sections —
+    cheap enough for every CI run; ``make bench-fl`` is the local entry
+    point."""
     import json
     import platform
-    rows = _engine_rows()
+    rows = _engine_rows() + _submodel_rows()
     by_name = {name: {"us_per_call": us, "derived": derived}
                for name, us, derived in rows}
 
     def _rps(name):
         return 1e6 / by_name[f"fl/engine_{name}_{ENGINE_N}"]["us_per_call"]
+
+    def _sub_us(name):
+        return by_name[f"fl/submodel_{name}_{SUBMODEL_N}"]["us_per_call"]
 
     record = {
         "kind": "fl_bench",
@@ -310,6 +376,7 @@ def emit_json(path: str) -> dict:
         "rounds_per_sec": {"eager": _rps("eager"), "scan": _rps("scan"),
                            "pallas": _rps("pallas")},
         "speedup_scan_vs_eager": _rps("scan") / _rps("eager"),
+        "speedup_width_vs_masked_step": _sub_us("masked") / _sub_us("width"),
         "rows": by_name,
     }
     with open(path, "w") as f:

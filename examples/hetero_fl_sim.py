@@ -11,9 +11,12 @@ objects (fleet x local training x upload x participation x timing), and
 
 and reporting the paper's Eq. (1) per-round wall time + upload bytes,
 then the cohort-vectorized runtime (DESIGN.md §9) and the at-scale
-scenarios it unlocks — partial participation, a straggler deadline, and
-the asynchronous staleness-aware runtime (DESIGN.md §10) where buffered
-aggregation stops the slow tiers from gating the virtual clock.
+scenarios it unlocks — partial participation, a straggler deadline,
+masked vs structured width-sliced tiers (DESIGN.md §13: the same tier
+budgets spent as real smaller dense sub-models instead of full-shape
+masks), and the asynchronous staleness-aware runtime (DESIGN.md §10)
+where buffered aggregation stops the slow tiers from gating the
+virtual clock.
 
   PYTHONPATH=src python examples/hetero_fl_sim.py
 """
@@ -79,6 +82,25 @@ run("cohort + 50% participation",
                                                             seed=1)))
 run("cohort + 5ms deadline drop",
     FLScenario(fleet=IID, timing=SyncDrop(deadline=0.005)))
+
+print("\nmasked emulation vs structured width-sliced sub-models "
+      "(DESIGN.md §13): same tier budgets, but submodel='width' cuts "
+      "REAL smaller dense models\nout of the global one (a 0.25 tier "
+      "trains a ceil(0.25*d) wide sub-network) and the server "
+      "scatter-aggregates per coordinate:")
+from repro.fl import scenario_census
+
+MASKED = FLScenario(fleet=IID)
+WIDTH = FLScenario(fleet=IID, local=LocalTraining(submodel="width"))
+run("cohort fedsgd masked tiers", MASKED)
+run("cohort fedsgd width-sliced", WIDTH)
+for name, sc in (("masked", MASKED), ("width-sliced", WIDTH)):
+    cen = scenario_census(sc)
+    low = next(r for r in cen["tiers"] if r["tier"] == "low")
+    print(f"  {name:12s} per-round upload "
+          f"{cen['total_upload_bytes_per_round'] / 1e3:6.1f}kB   "
+          f"low-tier T_local={low['T_local'] * 1e3:.3f}ms "
+          f"payload={low['payload_bytes']:.0f}B")
 
 print("\nasync staleness-aware runtime (virtual clock + buffered "
       "aggregation, DESIGN.md §10):")

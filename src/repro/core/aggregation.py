@@ -17,6 +17,21 @@ Quantized tiers contribute straight-through gradients (clip-aware STE);
 clustered tiers contribute identity-STE gradients. Cross-device averaging
 within a tier is the mesh's data-parallel mean (pjit global semantics), so
 this module only handles the cross-tier dimension.
+
+Structured (width-sliced) tiers (DESIGN.md §13) generalize the same
+formula per coordinate:
+
+    g[i] = sum_t w_t * cov_t[i] * g_t[i]  /  max(sum_t w_t * n_t * cov_t[i], eps)
+
+where ``cov_t`` is tier t's COVERAGE — 1 on the global coordinates its
+width slice (∧ inner mask) reaches, 0 elsewhere. Masked tiers carry full-
+shape coverage through ``accumulate_cohort`` exactly as before; sliced
+tiers contribute through :func:`scatter_accumulate`, which writes their
+sub-shaped update/mask into the prefix block of the same accumulators —
+one aggregation code path, two ways of feeding it. When a structured tier
+participates the denominators must be dense (per-coordinate coverage
+cannot live in a scalar): ``zeros_like_acc(params, dense_den=True)``,
+numerically identical to the scalar form by broadcasting.
 """
 from __future__ import annotations
 
@@ -63,12 +78,63 @@ def accumulate_cohort(acc, grad_sum, masks, weight, count,
     return num, den
 
 
-def zeros_like_acc(params):
+def zeros_like_acc(params, dense_den: bool = False):
+    """(num, den) accumulators. Denominators match mask shapes: full for
+    >=2-D leaves, scalar otherwise — unless ``dense_den``, which
+    allocates full-shape denominators for EVERY leaf. Required whenever a
+    structured tier contributes through :func:`scatter_accumulate` (its
+    per-coordinate coverage of 1-D leaves cannot accumulate into a
+    scalar); numerically identical to the scalar form by broadcasting."""
     num = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    # denominators match mask shapes: full for >=2-D leaves, scalar otherwise
     den = jax.tree.map(
-        lambda p: jnp.zeros(p.shape if p.ndim >= 2 else (), jnp.float32), params)
+        lambda p: jnp.zeros(p.shape if (p.ndim >= 2 or dense_den) else (),
+                            jnp.float32), params)
     return num, den
+
+
+def scatter_accumulate(acc, grad_sum, masks, spec, weight, count,
+                       staleness_weight=None):
+    """A structured cohort's contribution (DESIGN.md §13): coverage-
+    counted scatter into the shared accumulators.
+
+    ``grad_sum``/``masks`` live at the cohort's LOCAL (sub-model) shapes;
+    ``spec`` is the cohort's :class:`~repro.core.compression.SubmodelSpec`.
+    Each sliced leaf's update lands in the prefix block its width slice
+    covers:
+
+        num[:r, :c] += weight * staleness_weight * mask * grad_sum
+        den[:r, :c] += weight * count * mask
+
+    Unsliced leaves (spec slice ``None``) reduce to exactly
+    :func:`accumulate_cohort`'s adds — at width 1.0 the two functions are
+    bit-identical op for op (pinned in tests/test_structured.py) — and a
+    ``spec`` of ``None`` (an unstructured cohort) delegates outright, so
+    mixed fleets dispatch every cohort through this one entry point.
+    ``den`` must be dense for sliced leaves: build the accumulators with
+    ``zeros_like_acc(params, dense_den=True)``. ``staleness_weight`` has
+    :func:`accumulate_cohort`'s numerator-only semantics.
+    """
+    if spec is None:
+        return accumulate_cohort(acc, grad_sum, masks, weight, count,
+                                 staleness_weight=staleness_weight)
+    num, den = acc
+    scale = weight if staleness_weight is None else weight * staleness_weight
+    n_leaves, treedef = jax.tree_util.tree_flatten(num)
+    d_leaves = jax.tree.leaves(den)
+    g_leaves = jax.tree.leaves(grad_sum)
+    m_leaves = jax.tree.leaves(masks)
+    out_n, out_d = [], []
+    for n, d, g, m, sl in zip(n_leaves, d_leaves, g_leaves, m_leaves,
+                              spec.slices):
+        if sl is None:
+            out_n.append(n + scale * m * g)
+            out_d.append(d + weight * count * m)
+        else:
+            idx = tuple(slice(0, k) for k in sl)
+            out_n.append(n.at[idx].add(scale * m * g))
+            out_d.append(d.at[idx].add(weight * count * m))
+    return (jax.tree_util.tree_unflatten(treedef, out_n),
+            jax.tree_util.tree_unflatten(treedef, out_d))
 
 
 def finalize(acc):

@@ -1,17 +1,29 @@
 """Apply a compression plan to a whole parameter pytree.
 
-Policy: only matrix-shaped leaves (ndim >= 2) are compressed; 1-D leaves
-(norm scales, gates, biases, SSM dt/A parameters — quantization-sensitive)
-and the MoE router (load-balance stability) stay full precision. This is
-the standard practice the paper's framework would expose as configuration.
+Policy (``compressible``, defined in ``structured.py`` and shared with
+the width-slicing path): only matrix-shaped leaves (ndim >= 2) are
+compressed; 1-D leaves (norm scales, gates, biases, SSM dt/A parameters —
+quantization-sensitive) and the MoE router (load-balance stability) stay
+full precision. This is the standard practice the paper's framework would
+expose as configuration.
 
 Two entry points:
   - ``compress_with_masks(params, density, e_bits, m_bits)``: traced per-tier
     scalars, prune+quant only — used by the tier-scanned datacenter step.
   - ``compress_params(params, plan)``: static CompressionPlan, adds k-means
-    clustering — used by the per-client FL simulator.
+    clustering and structured width slicing — used by the FL runtimes.
+
+Shape contract of ``compress_params`` for STRUCTURED plans (DESIGN.md
+§13): the returned ``cparams`` live at the LOCAL (sliced) shapes — the
+device genuinely trains a smaller dense model — while ``masks`` stay at
+GLOBAL shapes, naming exactly which global coordinates the tier's update
+covers (zero-padded inner mask for sliced matrices, prefix coverage
+vectors for co-sliced biases). Unstructured plans keep the historical
+contract: cparams and masks both full-shape.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -20,19 +32,11 @@ from repro.core.compression.clustering import cluster_ste
 from repro.core.compression.plan import CompressionPlan
 from repro.core.compression.pruning import magnitude_mask
 from repro.core.compression.quantization import fake_quant_ste
+from repro.core.compression.structured import (compressible, expand_masks,
+                                               slice_tree, submodel_spec)
 
-_EXCLUDE = ("router",)
-
-
-def _path_str(path) -> str:
-    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-
-
-def compressible(path, leaf) -> bool:
-    p = _path_str(path)
-    if any(x in p for x in _EXCLUDE):
-        return False
-    return getattr(leaf, "ndim", len(getattr(leaf, "shape", ()))) >= 2
+__all__ = ["compressible", "compress_with_masks", "compress_params",
+           "payload_bits", "active_param_count"]
 
 
 def compress_with_masks(params, density, e_bits, m_bits, out_dtype=None):
@@ -64,7 +68,15 @@ def compress_with_masks(params, density, e_bits, m_bits, out_dtype=None):
 
 
 def compress_params(params, plan: CompressionPlan):
-    """Static-plan compression including clustering. Returns (cparams, masks)."""
+    """Static-plan compression including clustering and structured width
+    slicing. Returns (cparams, masks) — see the module docstring for the
+    structured shape contract."""
+    if plan.structured:
+        spec = submodel_spec(params, plan.width)
+        csub, sub_masks = compress_params(slice_tree(params, spec),
+                                          plan.inner())
+        return csub, expand_masks(sub_masks, spec, params)
+
     e, m = plan.quant_em()
 
     def one(path, w):
@@ -87,14 +99,45 @@ def compress_params(params, plan: CompressionPlan):
 
 def payload_bits(params, plan: CompressionPlan) -> float:
     """Model/gradient payload size in bits under a plan (the paper's
-    T_upload/T_download communication model)."""
+    T_upload/T_download communication model).
+
+    Per leaf: compressible leaves ship ``n_local * density`` values at
+    ``bits_per_weight`` (plus the ``cluster_k * 32``-bit codebook when
+    clustering is on); excluded leaves ship fp32. For structured plans
+    ``n_local`` is the EXACT sliced count from the width spec (ceil
+    slicing, co-sliced biases included) — the payload shrinks by the
+    sliced parameter count, not a density-scaled estimate.
+    """
+    spec = (submodel_spec(params, plan.width) if plan.structured else None)
     total = 0.0
-    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
-        n = leaf.size
+    for i, (path, leaf) in enumerate(
+            jax.tree_util.tree_flatten_with_path(params)[0]):
+        n = math.prod(spec.local_shape(i)) if spec is not None else leaf.size
         if compressible(path, leaf):
             total += n * plan.density * plan.bits_per_weight
             if plan.cluster_k:
                 total += plan.cluster_k * 32          # codebook overhead
         else:
             total += n * 32
+    return total
+
+
+def active_param_count(params, plan: CompressionPlan) -> float:
+    """The number of parameters a device actually TRAINS under ``plan``
+    — the FLOP basis of Eq. (1)'s T_local (``core/heterogeneity.py``).
+
+    Masked plans emulate sparsity on full shapes, so the legacy
+    density-scaled estimate ``n_params * density`` stands. Structured
+    plans train a genuinely smaller dense model: the count is the exact
+    sliced total (density applying within the slice for compressible
+    leaves; pass-through leaves count in full).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    if not plan.structured:
+        return sum(leaf.size for _, leaf in flat) * plan.density
+    spec = submodel_spec(params, plan.width)
+    total = 0.0
+    for i, (path, leaf) in enumerate(flat):
+        n = math.prod(spec.local_shape(i))
+        total += n * plan.density if compressible(path, leaf) else n
     return total

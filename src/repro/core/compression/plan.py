@@ -2,12 +2,15 @@
 
 A plan combines the paper's three techniques — pruning (keep-density),
 quantization (any (e,m) float format or int-k), clustering (k-means
-codebook) — to different degrees per tier. ``plan_arrays`` stacks a list of
-plans into traced scalar arrays so a single jitted federated step can scan
-over tiers (SPMD-clean: no per-tier retracing/unrolling).
+codebook) — to different degrees per tier, plus the structured axis
+(``width``, DESIGN.md §13): a width-sliced dense sub-model instead of a
+full-shape mask. ``plan_arrays`` stacks a list of plans into traced scalar
+arrays so a single jitted federated step can scan over tiers (SPMD-clean:
+no per-tier retracing/unrolling).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import jax.numpy as jnp
@@ -22,6 +25,39 @@ class CompressionPlan:
     quant: str | None = None      # float format name, "intK", or None
     cluster_k: int = 0            # k-means codebook size (0 = off)
     weight: float = 1.0           # aggregation weight (e.g. #devices in tier)
+    # structured sub-model width (DESIGN.md §13): None = masked emulation
+    # (the default, full-shape arrays); w in (0, 1] = the device trains a
+    # dense width-w prefix slice of the global model (HeteroFL-style).
+    # density/quant/cluster then apply WITHIN the slice. width is static
+    # (it sets array shapes), like cluster_k — see plan_arrays.
+    width: float | None = None
+
+    def __post_init__(self):
+        if self.width is not None and not 0.0 < self.width <= 1.0:
+            raise ValueError(f"width must be in (0, 1], got {self.width}")
+
+    @property
+    def structured(self) -> bool:
+        """True when the plan trains a width-sliced dense sub-model.
+        width=1.0 IS structured (full slice): it routes through the
+        structured code path, which is bit-identical to the masked one
+        there (pinned in tests/test_structured.py)."""
+        return self.width is not None
+
+    def inner(self) -> "CompressionPlan":
+        """The plan applied WITHIN the slice (width stripped): what the
+        sub-model is compressed with after slicing."""
+        return (dataclasses.replace(self, width=None) if self.structured
+                else self)
+
+    def as_width_sliced(self) -> "CompressionPlan":
+        """The structured counterpart of a masked plan: spend the density
+        budget as a width slice instead (width = density, density = 1.0;
+        a width-w slice keeps ~w^2 of each matrix — HeteroFL's model-rate
+        convention). Already-structured plans are returned unchanged."""
+        if self.structured:
+            return self
+        return dataclasses.replace(self, width=self.density, density=1.0)
 
     def quant_em(self) -> tuple[int, int]:
         """(e_bits, m_bits); (0, 0) means quantization off."""
@@ -68,8 +104,15 @@ def plan_arrays(plans: list[CompressionPlan]) -> dict:
 
     Note: cluster_k cannot be traced (codebook shape is static), so scanned
     steps support prune+quant tiers; clustering runs in the per-client FL
-    simulator where plans are static. Documented in DESIGN.md.
+    simulator where plans are static. Documented in DESIGN.md. The same
+    holds for width (a structured plan changes array SHAPES): structured
+    tiers live in the cohort/per-client FL runtimes, not the tier scan.
     """
+    structured = [p.name for p in plans if p.structured]
+    if structured:
+        raise ValueError(
+            f"structured (width-sliced) plans cannot be tier-scanned — "
+            f"their array shapes differ per tier: {structured}")
     em = [p.quant_em() for p in plans]
     return {
         "density": jnp.array([p.density for p in plans], jnp.float32),

@@ -62,7 +62,10 @@ denominator (with the cohort form's separate ``w·n_part`` denominator
 weights) and divide in one pass. The fused reduction reorders the
 tier-axis sum, so it is parity-tested to tolerance (not bitwise) against
 ``aggregation.finalize``; scalar-denominator leaves (1-D, router) keep
-the sequential path.
+the sequential path. Structured (width-sliced, DESIGN.md §13) cohorts
+produce SUB-shaped uploads that cannot stack on the kernel's tier axis,
+so a fleet containing any structured cohort keeps the sequential
+coverage-counted scatter path even under ``agg="pallas"``.
 
 Use it via ``simulate(scenario, rounds, engine="scan", chunk_rounds=N)``
 (``core/scenario.py``) — the async and per-client runtimes fall back to
@@ -80,9 +83,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import (accumulate_cohort, finalize,
-                                    zeros_like_acc)
+                                    scatter_accumulate, zeros_like_acc)
 from repro.core.federated import (CohortFLServer, _apply_fns,
-                                  _init_cohort_ef, cohort_step_fn)
+                                  _init_cohort_ef, _local_param_struct,
+                                  cohort_step_fn)
 
 AGG_BACKENDS = ("sequential", "pallas")
 
@@ -135,6 +139,20 @@ class ScanEngine:
                        for c in srv.cohorts]
         self._n_batch = [next(iter(c.data.values())).shape[1]
                          for c in srv.cohorts]
+        # structured (width-sliced) cohorts, DESIGN.md §13: per-cohort
+        # slice specs (None = masked plan) drive the in-body scatter, and
+        # EF carries are allocated at each cohort's LOCAL model shapes
+        self._specs = [srv.cohort_spec(ci) for ci in range(len(srv.cohorts))]
+        self._local_structs = [_local_param_struct(srv.params, c.plan)
+                               for c in srv.cohorts]
+        self._any_structured = srv.any_structured
+        if self.agg == "pallas" and self._any_structured:
+            import warnings
+            warnings.warn(
+                "agg='pallas': structured (width-sliced) cohorts cannot "
+                "stack on the kernel's tier axis, so this fleet "
+                "aggregates through the sequential scatter path instead "
+                "(DESIGN.md §13)", stacklevel=2)
         # Eq. (1) per-client constants: host float64 for the drop masks
         # (bit-identical to the eager comparison); f32 device copies for
         # the in-program wall max and byte sums, so those two RECORD
@@ -155,11 +173,13 @@ class ScanEngine:
         """The eager path's aggregation, replayed in cohort order:
         zero-participation cohorts contribute exact zeros (the eager loop
         skips them; adding 0.0 to a finite f32 accumulator is bitwise
-        identity, property-tested)."""
-        acc = zeros_like_acc(params)
-        for g_sum, masks, weight, count in per_cohort:
-            acc = accumulate_cohort(acc, g_sum, masks, jnp.float32(weight),
-                                    count)
+        identity, property-tested). Structured cohorts scatter their
+        sub-shaped update into the prefix block their slice covers,
+        exactly like the eager round's ``scatter_accumulate`` call."""
+        acc = zeros_like_acc(params, dense_den=self._any_structured)
+        for ci, (g_sum, masks, weight, count) in enumerate(per_cohort):
+            acc = scatter_accumulate(acc, g_sum, masks, self._specs[ci],
+                                     jnp.float32(weight), count)
         return finalize(acc)
 
     def _aggregate_pallas(self, params, per_cohort):
@@ -208,8 +228,10 @@ class ScanEngine:
             ef = efs[ci]
             if srv.upload_quant is not None and not srv.error_feedback:
                 # the eager path re-zeros the residuals every dispatch
-                # when feedback is off; recreate them in-program
-                ef = _init_cohort_ef(srv.cohorts[ci].size, params)
+                # when feedback is off; recreate them in-program (at the
+                # cohort's LOCAL shapes — sub-sized for structured plans)
+                ef = _init_cohort_ef(srv.cohorts[ci].size,
+                                     self._local_structs[ci])
             g_sum, masks, l_sum, new_ef = jax.lax.optimization_barrier(
                 step(params, datas[ci], part, ef))
             per_cohort.append((g_sum, masks, srv.cohorts[ci].plan.weight,
@@ -221,9 +243,12 @@ class ScanEngine:
             up_bytes = up_bytes + jnp.dot(part, self._payload_dev[ci])
             n_part = n_part + jnp.sum(part)
 
-        agg = (self._aggregate_sequential(params, per_cohort)
-               if self.agg == "sequential"
-               else self._aggregate_pallas(params, per_cohort))
+        # structured cohorts' sub-shaped uploads cannot stack on the
+        # kernel's tier axis, so they keep the sequential scatter path
+        # even under agg="pallas" (documented in the module docstring)
+        agg = (self._aggregate_pallas(params, per_cohort)
+               if self.agg == "pallas" and not self._any_structured
+               else self._aggregate_sequential(params, per_cohort))
         # barriers bracket the apply exactly like its eager jit boundary,
         # so the update subgraph compiles identically in both paths
         agg = jax.lax.optimization_barrier(agg)
@@ -331,13 +356,16 @@ class ScanEngine:
         """Per-cohort EF residuals for the scan carry. Real (stacked,
         lazily zero-initialized) buffers only when upload quantization
         with error feedback is on; otherwise leafless placeholders, so
-        the donated carry stays minimal."""
+        the donated carry stays minimal. Structured cohorts carry
+        SUB-shaped buffers (their uploads live at the sliced shapes) —
+        each cohort's donated sub-buffer rides the scan like the global
+        params do."""
         srv = self.server
         if srv.upload_quant is None or not srv.error_feedback:
             return tuple(() for _ in srv.cohorts)
         return tuple(c.ef_buffer if c.ef_buffer is not None
-                     else _init_cohort_ef(c.size, srv.params)
-                     for c in srv.cohorts)
+                     else _init_cohort_ef(c.size, self._local_structs[ci])
+                     for ci, c in enumerate(srv.cohorts))
 
     def run(self, rounds: int, participation=None) -> list[dict]:
         """Advance the server ``rounds`` federated rounds through the

@@ -52,9 +52,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import (accumulate_cohort, finalize,
-                                    hetero_aggregate, zeros_like_acc)
-from repro.core.compression import CompressionPlan, compress_params
+from repro.core.aggregation import (finalize, hetero_aggregate,
+                                    scatter_accumulate, zeros_like_acc)
+from repro.core.compression import (CompressionPlan, compress_params,
+                                    expand_update, slice_tree, submodel_spec)
 from repro.core.compression.quantization import fake_quant_ste
 from repro.core.heterogeneity import (PROFILES, cohort_round_time,
                                       round_time)
@@ -90,12 +91,17 @@ def _local_sgd(loss_fn: Callable, plan: CompressionPlan,
     """FedAvg local training IN COMPRESSED SPACE: w <- C(w - lr·g).
     The single definition of the paper's §3.1 requirement (re-compress
     after every local step), shared by the per-client and cohort paths.
-    Returns (cp0, batch) -> (last_loss, delta)."""
+    Returns (cp0, batch) -> (last_loss, delta). For structured plans
+    ``cp0`` already lives at the sliced shapes, so the per-step
+    re-compression uses the plan's WITHIN-slice part (``plan.inner()``)
+    — re-slicing an already-sliced model would be wrong."""
+    cplan = plan.inner()
+
     def run(cp0, batch):
         def step(w, _):
             loss, g = jax.value_and_grad(lambda p: loss_fn(p, batch))(w)
             w = jax.tree.map(lambda w, g: w - lr * g, w, g)
-            w = compress_params(w, plan)[0]
+            w = compress_params(w, cplan)[0]
             return w, loss
 
         w, losses = jax.lax.scan(step, cp0, None, length=local_steps)
@@ -107,12 +113,18 @@ def _local_sgd(loss_fn: Callable, plan: CompressionPlan,
 @functools.lru_cache(maxsize=64)
 def _client_local_train_fn(loss_fn: Callable, plan: CompressionPlan,
                            local_steps: int, lr: float):
-    """One client's FedAvg round (see _local_sgd)."""
+    """One client's FedAvg round (see _local_sgd). Structured plans
+    train the sliced sub-model; the delta is zero-padded back to global
+    shape here because the client-granular server aggregates full-shape
+    (the cohort path keeps sub-shaped uploads and scatters instead)."""
     local = _local_sgd(loss_fn, plan, local_steps, lr)
 
     def f(params, batch):
         cp0, masks = compress_params(params, plan)
         loss, delta = local(cp0, batch)
+        if plan.structured:
+            delta = expand_update(delta, submodel_spec(params, plan.width),
+                                  params)
         return loss, delta, masks
     return jax.jit(f)
 
@@ -244,9 +256,36 @@ def build_cohorts(clients: list[Client]) -> list[Cohort]:
 def _init_cohort_ef(size: int, params):
     """Zero-initialized stacked error-feedback buffer for a cohort: one
     residual row per client, matching each param leaf's dtype (residuals
-    must live in the same space as the gradients they correct)."""
+    must live in the same space as the gradients they correct). ``params``
+    may be real arrays or ``jax.ShapeDtypeStruct`` stand-ins — only
+    shapes/dtypes are read."""
     return jax.tree.map(
-        lambda p: jnp.zeros((size,) + p.shape, p.dtype), params)
+        lambda p: jnp.zeros((size,) + tuple(p.shape), p.dtype), params)
+
+
+def _local_param_struct(params, plan: CompressionPlan):
+    """Shape/dtype stand-ins for the LOCAL model a plan trains: the
+    width-sliced sub-tree for structured plans, ``params`` itself
+    otherwise. This is what EF buffers (which follow the uploads) are
+    allocated against."""
+    if not plan.structured:
+        return params
+    return jax.eval_shape(
+        lambda p: slice_tree(p, submodel_spec(p, plan.width)), params)
+
+
+def _memo_submodel_spec(cache: dict, ci: int, params, plan: CompressionPlan):
+    """Cohort ``ci``'s :class:`SubmodelSpec` (None for unstructured
+    plans), memoized in ``cache`` — param SHAPES are static per server,
+    so a spec never changes once computed. Shared by the sync and async
+    servers' aggregation dispatch."""
+    if not plan.structured:
+        return None
+    spec = cache.get(ci)
+    if spec is None:
+        spec = submodel_spec(params, plan.width)
+        cache[ci] = spec
+    return spec
 
 
 def _upload_and_sum(updates, part, ef, fmt: str | None):
@@ -285,7 +324,28 @@ def cohort_step_fn(loss_fn: Callable, plan: CompressionPlan, mode: str,
     (jitted per plan below) and the scan engine's fused round body
     (``core/engine.py``) — the bit-identity between the two paths rests
     on them tracing the same function.
+
+    Structured (width-sliced, DESIGN.md §13) plans run the SAME three
+    branches through a slice prologue: ``_base`` cuts the dense
+    sub-model out of the global params once per cohort step, the branch
+    then compresses WITHIN the slice (``plan.inner()``) and
+    trains/differentiates the small model, and the returned
+    ``(update_sum, masks, EF)`` stay SUB-shaped — callers aggregate them
+    with ``scatter_accumulate`` instead of ``accumulate_cohort``, and EF
+    residuals ride at sub-shape (the memory win). For unstructured plans
+    ``_base`` is ``params`` itself and ``inner == plan``, so this is
+    verbatim the historical masked step; at width 1.0 ``slice_tree``
+    returns the same leaf objects, so the structured path traces the
+    exact jaxpr of its masked twin (bit-identity pinned in
+    ``tests/test_structured.py``).
     """
+    inner = plan.inner()
+
+    def _base(params):
+        if not plan.structured:
+            return params
+        return slice_tree(params, submodel_spec(params, plan.width))
+
     if mode == "fedsgd" and upload_fmt is None:
         # §Perf: the participation-weighted SUM of per-client gradients is
         # the gradient of the participation-weighted loss sum (linearity),
@@ -299,24 +359,26 @@ def cohort_step_fn(loss_fn: Callable, plan: CompressionPlan, mode: str,
         # vmapped path below.
         def f(params, batches, part, ef):
             def tot(p):
-                cp, masks = compress_params(p, plan)
+                cp, masks = compress_params(p, inner)
                 losses = jax.vmap(lambda b: loss_fn(cp, b))(batches)
                 return jnp.sum(part * losses), masks
             (l_sum, masks), g_sum = jax.value_and_grad(
-                tot, has_aux=True)(params)
+                tot, has_aux=True)(_base(params))
             return g_sum, masks, l_sum, ef
         return f
 
     if mode == "fedsgd":
         def f(params, batches, part, ef):
+            p0 = _base(params)
+
             def per_client(batch):
                 def loss_of(p):
-                    cp, _ = compress_params(p, plan)
+                    cp, _ = compress_params(p, inner)
                     return loss_fn(cp, batch)
-                return jax.value_and_grad(loss_of)(params)
+                return jax.value_and_grad(loss_of)(p0)
 
             losses, grads = jax.vmap(per_client)(batches)
-            _, masks = compress_params(params, plan)
+            _, masks = compress_params(p0, inner)
             g_sum, ef = _upload_and_sum(grads, part, ef, upload_fmt)
             return g_sum, masks, jnp.sum(part * losses), ef
         return f
@@ -324,7 +386,7 @@ def cohort_step_fn(loss_fn: Callable, plan: CompressionPlan, mode: str,
     local = _local_sgd(loss_fn, plan, local_steps, local_lr)
 
     def f(params, batches, part, ef):
-        cp0, masks = compress_params(params, plan)
+        cp0, masks = compress_params(_base(params), inner)
         losses, deltas = jax.vmap(lambda batch: local(cp0, batch))(batches)
         d_sum, ef = _upload_and_sum(deltas, part, ef, upload_fmt)
         return d_sum, masks, jnp.sum(part * losses), ef
@@ -380,7 +442,8 @@ def _cohort_upload(server, cohort: Cohort, batches, part, params):
     ``(grad_sum, masks, loss_sum)``."""
     ef = cohort.ef_buffer
     if server.upload_quant is not None and ef is None:
-        ef = _init_cohort_ef(cohort.size, params)
+        ef = _init_cohort_ef(cohort.size,
+                             _local_param_struct(params, cohort.plan))
     elif server.upload_quant is None:
         ef = ()                     # leafless placeholder pytree
     fn = _cohort_step_jit(server.model.loss_fn, cohort.plan, server.mode,
@@ -432,6 +495,9 @@ class CohortFLServer:
     # per-(cohort, n_batch) Eq. (1) memo: the fleet, plans and param
     # SHAPES are static per server, so times never change across rounds
     _times_cache: dict = field(default_factory=dict, init=False, repr=False)
+    # per-cohort width-slice specs (None for unstructured plans): shapes
+    # are static per server, so these never change either
+    _spec_cache: dict = field(default_factory=dict, init=False, repr=False)
 
     def __post_init__(self):
         if self.opt_state is None:
@@ -453,6 +519,18 @@ class CohortFLServer:
     @property
     def n_clients(self) -> int:
         return sum(c.size for c in self.cohorts)
+
+    @property
+    def any_structured(self) -> bool:
+        """True when any cohort trains a width-sliced sub-model — the
+        aggregation accumulators then need dense denominators."""
+        return any(c.plan.structured for c in self.cohorts)
+
+    def cohort_spec(self, ci: int):
+        """Cohort ``ci``'s :class:`SubmodelSpec` (None for unstructured
+        plans), memoized — params SHAPES are static per server."""
+        return _memo_submodel_spec(self._spec_cache, ci, self.params,
+                                   self.cohorts[ci].plan)
 
     def cohort_times(self, ci: int, n_batch: int) -> dict:
         """Cohort ``ci``'s Eq. (1) time table at ``n_batch`` samples,
@@ -498,7 +576,7 @@ class CohortFLServer:
         rng = np.random.default_rng([self.seed, self.step])
         sampled = (self._sample_participation(rng) if participation is None
                    else [np.asarray(p, bool) for p in participation])
-        acc = zeros_like_acc(self.params)
+        acc = zeros_like_acc(self.params, dense_den=self.any_structured)
         loss_sum = jnp.float32(0.0)
         n_part_total, n_dropped = 0, 0
         wall, upload_bytes = 0.0, 0.0
@@ -521,9 +599,10 @@ class CohortFLServer:
 
             g_sum, masks, l_sum = _cohort_upload(self, cohort, batches,
                                                  part, self.params)
-            acc = accumulate_cohort(acc, g_sum, masks,
-                                    jnp.float32(cohort.plan.weight),
-                                    jnp.float32(n_p))
+            acc = scatter_accumulate(acc, g_sum, masks,
+                                     self.cohort_spec(ci),
+                                     jnp.float32(cohort.plan.weight),
+                                     jnp.float32(n_p))
             loss_sum = loss_sum + l_sum
 
         if n_part_total:
@@ -603,6 +682,8 @@ class AsyncFLServer:
             raise ValueError(f"mode must be fedsgd|fedavg, got {self.mode!r}")
         if self.staleness_exp < 0:
             raise ValueError("staleness_exp must be >= 0")
+        # per-cohort width-slice specs (structured plans; shapes static)
+        self._spec_cache: dict = {}
         # flatten the fleet into scheduler slots: client index -> cohort row
         self._slots: list[tuple[int, int]] = []
         times, payload = [], []
@@ -633,6 +714,12 @@ class AsyncFLServer:
         return sum(c.size for c in self.cohorts)
 
     @property
+    def any_structured(self) -> bool:
+        """True when any cohort trains a width-sliced sub-model — the
+        aggregation accumulators then need dense denominators."""
+        return any(c.plan.structured for c in self.cohorts)
+
+    @property
     def n_versions_live(self) -> int:
         return len(self._versions)
 
@@ -648,7 +735,7 @@ class AsyncFLServer:
             ci, row = self._slots[u.client]
             groups.setdefault((ci, u.version), []).append(row)
 
-        acc = zeros_like_acc(self.params)
+        acc = zeros_like_acc(self.params, dense_den=self.any_structured)
         loss_sum = jnp.float32(0.0)
         upload_bytes = sum(self._payload_bytes[u.client]
                            for u in win.uploads)
@@ -659,10 +746,12 @@ class AsyncFLServer:
             g_sum, masks, l_sum = _cohort_upload(self, cohort, cohort.data,
                                                  part, self._versions[v])
             discount = (1.0 + (win.version - v)) ** (-self.staleness_exp)
-            acc = accumulate_cohort(acc, g_sum, masks,
-                                    jnp.float32(cohort.plan.weight),
-                                    jnp.float32(len(rows)),
-                                    staleness_weight=jnp.float32(discount))
+            spec = _memo_submodel_spec(self._spec_cache, ci, self.params,
+                                       cohort.plan)
+            acc = scatter_accumulate(
+                acc, g_sum, masks, spec,
+                jnp.float32(cohort.plan.weight), jnp.float32(len(rows)),
+                staleness_weight=jnp.float32(discount))
             loss_sum = loss_sum + l_sum
 
         _apply_update(self, finalize(acc), win.version)

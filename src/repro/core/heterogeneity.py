@@ -11,7 +11,8 @@ from __future__ import annotations
 import functools
 from dataclasses import dataclass
 
-from repro.core.compression import CompressionPlan, payload_bits
+from repro.core.compression import (CompressionPlan, active_param_count,
+                                    payload_bits)
 
 
 @dataclass(frozen=True)
@@ -48,10 +49,12 @@ def round_time(params, plan: CompressionPlan, profile: DeviceProfile,
                n_samples: int, local_steps: int = 1,
                server_flops: float = SERVER_FLOPS) -> dict:
     """Paper Eq. (1), per round, in seconds. Compression reduces T_local
-    (density·N active params), T_upload (compressed gradient), and
+    (the params the device actually trains: density-scaled for masked
+    plans, the exact sliced count for structured ones — see
+    ``active_param_count``), T_upload (compressed gradient), and
     T_download (compressed model)."""
-    n_params, bits = _payload_stats(params, plan)
-    t_local = local_steps * train_flops(n_params * plan.density, n_samples) / profile.flops
+    n_params, n_active, bits = _payload_stats(params, plan)
+    t_local = local_steps * train_flops(n_active, n_samples) / profile.flops
     t_up = bits / profile.up_bps
     t_global = train_flops(n_params, 1) / server_flops     # aggregation pass
     t_down = bits / profile.down_bps
@@ -61,16 +64,16 @@ def round_time(params, plan: CompressionPlan, profile: DeviceProfile,
             "payload_bytes": bits / 8}
 
 
-def _payload_stats(params, plan: CompressionPlan) -> tuple[int, float]:
-    """(n_params, payload bits) — the only way ``params`` enters Eq. (1).
-    Both depend on the tree's SHAPES, never its values."""
+def _payload_stats(params, plan: CompressionPlan) -> tuple[int, float, float]:
+    """(n_params, n_active_params, payload bits) — the only way ``params``
+    enters Eq. (1). All depend on the tree's SHAPES, never its values."""
     import jax
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    return n_params, payload_bits(params, plan)
+    return n_params, active_param_count(params, plan), payload_bits(params, plan)
 
 
 @functools.lru_cache(maxsize=4096)
-def _eq1_cohort_cached(n_params: int, bits: float, density: float,
+def _eq1_cohort_cached(n_params: int, n_active: float, bits: float,
                        profiles: tuple[DeviceProfile, ...], ns_key,
                        local_steps: int, server_flops: float) -> dict:
     """The arithmetic core of :func:`cohort_round_time`, memoized on its
@@ -82,7 +85,7 @@ def _eq1_cohort_cached(n_params: int, bits: float, density: float,
     up = np.array([p.up_bps for p in profiles], np.float64)
     down = np.array([p.down_bps for p in profiles], np.float64)
     ns = np.broadcast_to(np.asarray(ns_key, np.float64), flops.shape)
-    t_local = local_steps * train_flops(n_params * density, ns) / flops
+    t_local = local_steps * train_flops(n_active, ns) / flops
     t_up = bits / up
     t_global = np.full_like(flops, train_flops(n_params, 1) / server_flops)
     t_down = bits / down
@@ -110,21 +113,38 @@ def cohort_round_time(params, plan: CompressionPlan,
     between calls with the same key: treat them as read-only.
     """
     import numpy as np
-    n_params, bits = _payload_stats(params, plan)
+    n_params, n_active, bits = _payload_stats(params, plan)
     ns_key = (float(n_samples) if np.ndim(n_samples) == 0
               else tuple(float(x) for x in np.asarray(n_samples).ravel()))
-    return dict(_eq1_cohort_cached(n_params, bits, plan.density,
+    return dict(_eq1_cohort_cached(n_params, n_active, bits,
                                    tuple(profiles), ns_key, local_steps,
                                    server_flops))
 
 
 def memory_overhead(params, plan: CompressionPlan, batch: int,
-                    act_bytes_per_sample: float = 0.0) -> float:
-    """Training memory on-device: compressed weights + grads + activations."""
+                    act_bytes_per_sample: float = 0.0,
+                    opt_slots: int = 0) -> float:
+    """Training memory on-device: compressed weights + grads + optimizer
+    slots + activations.
+
+    ``opt_slots`` counts the optimizer's per-parameter state arrays —
+    0 for plain SGD (the default, and the historical behaviour), 1 for
+    momentum, 2 for Adam/AdamW (m and v). Each slot is another resident
+    copy of the (compressed) parameter payload, so momentum/Adam roughly
+    1.5x/2x the weights+grads footprint the old model stopped at.
+    """
+    if opt_slots < 0:
+        raise ValueError(f"opt_slots must be >= 0, got {opt_slots}")
     bits = payload_bits(params, plan)
-    return 2 * bits / 8 + batch * act_bytes_per_sample
+    return (2 + opt_slots) * bits / 8 + batch * act_bytes_per_sample
 
 
 def fits(params, plan: CompressionPlan, profile: DeviceProfile,
-         batch: int = 1) -> bool:
-    return memory_overhead(params, plan, batch) <= profile.mem_bytes
+         batch: int = 1, act_bytes_per_sample: float = 0.0,
+         opt_slots: int = 0) -> bool:
+    """Does training this plan's local model fit the device's RAM?
+    ``opt_slots`` threads through to :func:`memory_overhead`: a model
+    that fits under SGD can exceed memory once Adam doubles the resident
+    state."""
+    return memory_overhead(params, plan, batch, act_bytes_per_sample,
+                           opt_slots) <= profile.mem_bytes

@@ -169,17 +169,28 @@ class FleetSpec:
 
 @dataclass(frozen=True)
 class LocalTraining:
-    """How a sampled client trains: the paper's §4.2 axis."""
+    """How a sampled client trains: the paper's §4.2 axis, plus the
+    sub-model axis (DESIGN.md §13) — ``submodel="mask"`` (default)
+    emulates each tier's compression on full-shape arrays with 0/1
+    masks; ``submodel="width"`` spends each tier's density budget as a
+    dense width slice instead (HeteroFL-style: every tier plan becomes
+    ``plan.as_width_sliced()``, so a 0.25-density tier trains a real
+    0.25-width sub-network and the server scatter-aggregates per
+    coordinate over whichever tiers cover a weight)."""
     mode: str = "fedsgd"            # fedsgd | fedavg
     local_steps: int = 5            # fedavg steps per round
     local_lr: float = 0.1           # fedavg on-device lr
     server_lr: float = 1.0          # fedavg server-side delta scale
+    submodel: str = "mask"          # mask | width (structured slicing)
 
     def __post_init__(self):
         if self.mode not in ("fedsgd", "fedavg"):
             raise ValueError(f"mode must be fedsgd|fedavg, got {self.mode!r}")
         if self.local_steps < 1:
             raise ValueError("local_steps must be >= 1")
+        if self.submodel not in ("mask", "width"):
+            raise ValueError(f"submodel must be mask|width, "
+                             f"got {self.submodel!r}")
 
     def to_dict(self) -> dict:
         return _fields_dict(self)
@@ -420,6 +431,13 @@ def build_server(scenario: FLScenario, model, optimizer, params, *,
                                       FLServer)
     if clients is None:
         clients = scenario.fleet.build_clients(shards)
+    if scenario.local.submodel == "width":
+        # structured sub-models (DESIGN.md §13): each tier's density
+        # budget becomes a dense width slice. New Client objects — the
+        # caller's list (shared across servers in tests/benches) is
+        # never mutated.
+        clients = [dataclasses.replace(c, plan=c.plan.as_width_sliced())
+                   for c in clients]
     common = dict(model=model, optimizer=optimizer, params=params,
                   mode=scenario.local.mode,
                   local_steps=scenario.local.local_steps,
@@ -555,7 +573,10 @@ def scenario_census(scenario: FLScenario, params=None) -> dict:
     per_client_T: list[float] = []
     total_bytes = 0.0
     for i, (tier, prof) in enumerate(zip(spec.tiers, spec.client_profiles)):
-        t = round_time(params, DEVICE_TIERS[tier], PROFILES[prof], sizes[i],
+        plan = DEVICE_TIERS[tier]
+        if scenario.local.submodel == "width":
+            plan = plan.as_width_sliced()       # sliced Eq. (1) counts
+        t = round_time(params, plan, PROFILES[prof], sizes[i],
                        local_steps)
         per_client_T.append(t["T"])
         total_bytes += t["payload_bytes"]

@@ -12,7 +12,9 @@ the internal execution layer the factory assembles:
     print(result.final.loss, result.sim_time)
 """
 from repro.core.compression import (CompressionPlan, DEVICE_TIERS,
-                                    default_tier_plans)  # noqa: F401
+                                    SubmodelSpec, default_tier_plans,
+                                    expand_update, slice_submodel,
+                                    submodel_spec)  # noqa: F401
 from repro.core.engine import ScanEngine, simulate_rounds  # noqa: F401
 from repro.core.federated import (AsyncFLServer, Client, Cohort,
                                   CohortFLServer, FLServer,

@@ -110,6 +110,36 @@ def test_payload_bits_ordering():
     assert sizes == sorted(sizes, reverse=True), sizes
 
 
+def test_payload_bits_excluded_leaves_ship_fp32():
+    """The excluded-leaf path: 1-D scales and the router always count at
+    32 bits regardless of the plan's density/quant — only the
+    compressible wq leaf scales."""
+    p = _params()
+    n_wq = p["layers"]["attn"]["wq"]["w"].size
+    n_excl = p["layers"]["ln1"].size + p["layers"]["moe"]["router"]["w"].size
+    plan = CompressionPlan("x", density=0.5, quant="fp8_e4m3")
+    assert payload_bits(p, plan) == n_wq * 0.5 * 8 + n_excl * 32
+    # at full density / no quant everything is fp32
+    assert payload_bits(p, CompressionPlan("hub")) == (n_wq + n_excl) * 32
+
+
+def test_payload_bits_clustering_codebook_overhead():
+    """Clustered plans ship log2(k) bits per kept weight PLUS one
+    k-entry fp32 codebook per compressible leaf; excluded leaves pay
+    neither."""
+    p = _params()
+    n_wq = p["layers"]["attn"]["wq"]["w"].size
+    n_excl = p["layers"]["ln1"].size + p["layers"]["moe"]["router"]["w"].size
+    plan = CompressionPlan("c", density=0.5, cluster_k=16)
+    expect = n_wq * 0.5 * 4 + 16 * 32 + n_excl * 32    # log2(16)=4 bits
+    assert payload_bits(p, plan) == expect
+    # codebook overhead is per compressible leaf: a second matrix leaf
+    # adds its own 16-entry codebook
+    p2 = dict(p)
+    p2["extra"] = {"w": jnp.zeros((8, 8))}
+    assert payload_bits(p2, plan) == expect + 64 * 0.5 * 4 + 16 * 32
+
+
 def test_plan_arrays_shapes():
     arrs = plan_arrays([DEVICE_TIERS["hub"], DEVICE_TIERS["low"]])
     assert arrs["density"].shape == (2,)

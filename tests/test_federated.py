@@ -10,7 +10,8 @@ from repro import optim
 from repro.configs.paper_mlp import config
 from repro.core.compression import DEVICE_TIERS, CompressionPlan
 from repro.core.federated import Client, FLServer
-from repro.core.heterogeneity import PROFILES, fits, round_time
+from repro.core.heterogeneity import (PROFILES, fits, memory_overhead,
+                                      round_time)
 from repro.data import make_gaussian_dataset, partition_iid
 from repro.models import mlp
 
@@ -136,3 +137,39 @@ def test_memory_fit_check():
     assert fits(params, DEVICE_TIERS["embedded"], PROFILES["embedded"])
     big = {"w": jnp.zeros((4096, 4096))}
     assert not fits(big, DEVICE_TIERS["hub"], PROFILES["embedded"])
+
+
+def test_memory_overhead_counts_optimizer_slots():
+    """The memory model: weights + grads is (2+0) payloads (SGD, the
+    default and the historical behaviour); momentum adds one resident
+    slot, Adam two. Activations stack on top unchanged."""
+    params = {"w": jnp.zeros((64, 64))}
+    from repro.core.compression import CompressionPlan, payload_bits
+    plan = CompressionPlan("x")
+    base = payload_bits(params, plan) / 8
+    assert memory_overhead(params, plan, batch=0) == 2 * base
+    assert memory_overhead(params, plan, batch=0, opt_slots=1) == 3 * base
+    assert memory_overhead(params, plan, batch=0, opt_slots=2) == 4 * base
+    assert (memory_overhead(params, plan, batch=8,
+                            act_bytes_per_sample=100.0, opt_slots=2)
+            == 4 * base + 800.0)
+    with pytest.raises(ValueError, match="opt_slots"):
+        memory_overhead(params, plan, batch=1, opt_slots=-1)
+
+
+def test_fits_flips_when_optimizer_slots_blow_the_budget():
+    """Both fits() paths, directly: a model that fits a device under SGD
+    can exceed its RAM once Adam doubles the resident state."""
+    from repro.core.compression import CompressionPlan, payload_bits
+    from repro.core.heterogeneity import DeviceProfile
+    params = {"w": jnp.zeros((128, 128))}
+    plan = CompressionPlan("x")
+    base = payload_bits(params, plan) / 8
+    dev = DeviceProfile("toy", 1e9, mem_bytes=3 * base, up_bps=1e6,
+                        down_bps=1e6)
+    assert fits(params, plan, dev)                      # 2 payloads <= 3
+    assert fits(params, plan, dev, opt_slots=1)         # 3 payloads <= 3
+    assert not fits(params, plan, dev, opt_slots=2)     # Adam: 4 > 3
+    # activations thread through too
+    assert not fits(params, plan, dev, batch=2,
+                    act_bytes_per_sample=base, opt_slots=1)
