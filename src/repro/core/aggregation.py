@@ -69,12 +69,23 @@ def accumulate_cohort(acc, grad_sum, masks, weight, count,
     :func:`finalize`), and in a mixed buffer stale groups are additionally
     down-weighted relative to fresh ones. At staleness 0 (weight 1, the
     default) this is exactly the synchronous contribution.
+
+    Association invariant (DESIGN.md §14): the multiply feeding each
+    accumulator add is always the EXACT product ``m * x`` (masks are
+    strictly 0/1, so ``m * x`` never rounds), with any inexact scalar
+    product (``scale * g``, ``weight * count``) rounded one multiply
+    earlier. Compiled into a fused engine body, XLA/LLVM contract a
+    ``mul`` feeding an ``add`` into an FMA — which skips the product's
+    intermediate rounding and shifts low bits UNLESS the product is
+    exact. With this ordering the contraction is bit-transparent, so the
+    eager op-by-op chain and the scan engines' fused bodies agree
+    bitwise. Do not "simplify" it back to ``a + scale * m * g``.
     """
     num, den = acc
     scale = weight if staleness_weight is None else weight * staleness_weight
-    num = jax.tree.map(lambda a, g, m: a + scale * m * g,
+    num = jax.tree.map(lambda a, g, m: a + m * (scale * g),
                        num, grad_sum, masks)
-    den = jax.tree.map(lambda a, m: a + weight * count * m, den, masks)
+    den = jax.tree.map(lambda a, m: a + m * (weight * count), den, masks)
     return num, den
 
 
@@ -124,15 +135,16 @@ def scatter_accumulate(acc, grad_sum, masks, spec, weight, count,
     g_leaves = jax.tree.leaves(grad_sum)
     m_leaves = jax.tree.leaves(masks)
     out_n, out_d = [], []
+    # m * (scalar product): accumulate_cohort's association invariant
     for n, d, g, m, sl in zip(n_leaves, d_leaves, g_leaves, m_leaves,
                               spec.slices):
         if sl is None:
-            out_n.append(n + scale * m * g)
-            out_d.append(d + weight * count * m)
+            out_n.append(n + m * (scale * g))
+            out_d.append(d + m * (weight * count))
         else:
             idx = tuple(slice(0, k) for k in sl)
-            out_n.append(n.at[idx].add(scale * m * g))
-            out_d.append(d.at[idx].add(weight * count * m))
+            out_n.append(n.at[idx].add(m * (scale * g)))
+            out_d.append(d.at[idx].add(m * (weight * count)))
     return (jax.tree_util.tree_unflatten(treedef, out_n),
             jax.tree_util.tree_unflatten(treedef, out_d))
 

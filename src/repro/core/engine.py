@@ -84,9 +84,10 @@ import numpy as np
 
 from repro.core.aggregation import (accumulate_cohort, finalize,
                                     scatter_accumulate, zeros_like_acc)
-from repro.core.federated import (CohortFLServer, _apply_fns,
+from repro.core.federated import (AsyncFLServer, CohortFLServer, _apply_fns,
                                   _init_cohort_ef, _local_param_struct,
-                                  cohort_step_fn)
+                                  cohort_step_fn, window_groups)
+from repro.core.schedule import materialize_windows
 
 AGG_BACKENDS = ("sequential", "pallas")
 
@@ -96,8 +97,9 @@ def _not_scannable(server) -> str | None:
     if not isinstance(server, CohortFLServer):
         return (f"{type(server).__name__} is not cohort-vectorized; the "
                 "scan engine compiles CohortFLServer rounds only (the "
-                "async runtime's event-driven windows and the per-client "
-                "loop stay eager)")
+                "async runtime's buffered windows compile through "
+                "WindowScanEngine instead, DESIGN.md §14; the per-client "
+                "loop stays eager)")
     return None
 
 
@@ -390,11 +392,356 @@ class ScanEngine:
         return recs
 
 
+# --------------------------------------------------------------------------
+# Window-scan async engine (DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+@dataclass
+class WindowScanEngine:
+    """Compiles chunks of ``AsyncFLServer`` aggregation windows into one
+    scanned, donated-buffer program (DESIGN.md §14).
+
+    The virtual-clock schedule is fully deterministic given
+    ``(times, buffer_size, seed, jitter)``, so the whole window sequence
+    is host-precomputed (``schedule.materialize_windows``) as stacked
+    arrays: per-window (cohort, version-lag) group masks, staleness
+    discounts ``(1+s)^-a``, ring indices and apply-step metadata. The
+    device program is then a ``lax.scan`` over windows with the group
+    slots unrolled — each slot replays one eager group dispatch
+    (``cohort_step_fn`` verbatim, an ``optimization_barrier`` standing
+    in for its jit boundary) — and the bounded version store rides the
+    carry as a RING of ``max observed version lag + 1`` param copies:
+    version ``v`` lives at slot ``v % capacity``, group slots gather
+    their trained-against params from it, and each window writes the
+    freshly-applied params over the slot whose version can no longer be
+    referenced. Unused group slots carry all-zero participation masks
+    and contribute exact zeros to the f32 accumulators (bitwise
+    identity, the same property the sync engine rests on).
+
+    The server object stays the source of truth: after a run the engine
+    writes back ``params`` / ``opt_state`` / ``version`` / the
+    refcounted version store / cohort EF buffers, advances the heap
+    scheduler to match, and appends eager-schema records to
+    ``history`` — so engine windows and eager ``step()`` calls can be
+    freely interleaved, bit-identically (pinned in
+    ``tests/test_engine.py``).
+
+    Ring capacity and per-cohort slot counts grow monotonically across
+    runs (a larger-than-needed ring or an extra padded slot is a
+    no-op), so repeated same-length runs on a stationary schedule reuse
+    the compiled chunk instead of re-tracing. Memory is
+    ``capacity x |params|`` for the ring — bounded by the fleet's speed
+    spread, as in the eager version store.
+    """
+    server: AsyncFLServer
+    chunk_windows: int = 0
+    chunks_run: int = field(default=0, init=False)
+    windows_run: int = field(default=0, init=False)
+    # engine-produced (opt_state, efs) from the last run: safe to donate
+    _last_out: tuple | None = field(default=None, init=False, repr=False)
+    # monotonic compiled-shape state: version-ring capacity and per-cohort
+    # unrolled group-slot counts (see class docstring)
+    _cap: int = field(default=1, init=False)
+    _n_slots: list = field(default=None, init=False, repr=False)
+
+    def __post_init__(self):
+        if not isinstance(self.server, AsyncFLServer):
+            raise TypeError(
+                f"{type(self.server).__name__} is not the async buffered "
+                "runtime; the window-scan engine compiles AsyncFLServer "
+                "windows only (use ScanEngine for CohortFLServer rounds)")
+        if self.chunk_windows < 0:
+            raise ValueError(
+                "chunk_windows must be >= 0 (0 = one chunk per run)")
+        srv = self.server
+        self._steps = [cohort_step_fn(srv.model.loss_fn, c.plan, srv.mode,
+                                      srv.local_steps, srv.local_lr,
+                                      srv.upload_quant)
+                       for c in srv.cohorts]
+        # per-cohort width-slice specs / local shapes, same memo the eager
+        # server's dispatch path uses (shapes are static per server)
+        from repro.core.federated import _memo_submodel_spec
+        self._specs = [_memo_submodel_spec(srv._spec_cache, ci, srv.params,
+                                           c.plan)
+                       for ci, c in enumerate(srv.cohorts)]
+        self._local_structs = [_local_param_struct(srv.params, c.plan)
+                               for c in srv.cohorts]
+        self._any_structured = srv.any_structured
+        self._acc_struct = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), srv.params)
+        self._n_slots = [0] * len(srv.cohorts)
+        # runtime ones shaped like each cohort step's masks output: fed
+        # into the chunk as a jit ARGUMENT and multiplied onto the masks
+        # (exact — masks are 0/1) so every mask leaf reaching the
+        # accumulate is a runtime value. Plans without pruning return
+        # literal-constant masks (jnp.ones_like / scalar 1.0), and XLA's
+        # algebraic simplifier folds a constant-ones multiply out of the
+        # fused body — re-exposing the inexact staleness product to FMA
+        # contraction and breaking bit-identity with the eager op-by-op
+        # chain (DESIGN.md §14).
+        self._mask_ones = []
+        for ci, c in enumerate(srv.cohorts):
+            ef0 = _init_cohort_ef(c.size, self._local_structs[ci])
+            out = jax.eval_shape(self._steps[ci], self._acc_struct, c.data,
+                                 jnp.zeros(c.size, jnp.float32), ef0)
+            self._mask_ones.append(jax.tree.map(
+                lambda s: jnp.ones(s.shape, s.dtype), out[1]))
+        self._mask_ones = tuple(self._mask_ones)
+        _, self._apply = _apply_fns(srv.optimizer, srv.mode, srv.server_lr)
+        self._chunk = jax.jit(self._chunk_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ device
+
+    def _window_body(self, carry, x, datas, mask_ones):
+        """One buffered aggregation window, fused: the eager ``step()``'s
+        sorted (cohort, version) group loop with ring gathers standing in
+        for the version-store lookups and an optimization barrier at
+        every eager dispatch boundary."""
+        srv = self.server
+        ring, opt_state, efs = carry
+        acc = zeros_like_acc(self._acc_struct,
+                             dense_den=self._any_structured)
+        loss_sum = jnp.float32(0.0)
+        new_efs = []
+        for ci, step in enumerate(self._steps):
+            ef = efs[ci]
+            n_slots = x["slot"][ci].shape[0]
+            for sl in range(n_slots):
+                if srv.upload_quant is not None and not srv.error_feedback:
+                    # the eager path re-zeros residuals on every group
+                    # dispatch when feedback is off; recreate in-program
+                    ef = _init_cohort_ef(srv.cohorts[ci].size,
+                                         self._local_structs[ci])
+                # an absent group (padded slot, count 0) is gated out by
+                # lax.cond rather than run fully masked: the whole
+                # step + accumulate lives in the taken branch, and the
+                # skip branch passes (acc, loss, ef) through untouched —
+                # bitwise-equivalent, since an all-zero participation
+                # mask contributes exact zeros to a finite f32
+                # accumulator (a no-op), but skipping saves the cohort
+                # step's FLOPs AND any zero-buffer materialization. At
+                # bench scale each window populates one of the unrolled
+                # slots, so this removes ~(total slots - 1)/total of the
+                # per-window compute.
+                def _run(ring, acc, loss_sum, ef,
+                         _ci=ci, _sl=sl, _step=step):
+                    pv = jax.tree.map(lambda r: r[x["slot"][_ci][_sl]],
+                                      ring)
+                    g_sum, masks, l_sum, new_ef = _step(
+                        pv, datas[_ci], x["part"][_ci][_sl], ef)
+                    # exact ×1 re-anchor: keeps constant-foldable masks
+                    # runtime-valued so the accumulate's FMA contraction
+                    # stays on the exact 0/1-mask product (association
+                    # invariant, aggregation.py / DESIGN.md §14)
+                    masks = jax.tree.map(lambda m, o: m * o,
+                                         masks, mask_ones[_ci])
+                    acc = scatter_accumulate(
+                        acc, g_sum, masks, self._specs[_ci],
+                        jnp.float32(srv.cohorts[_ci].plan.weight),
+                        x["count"][_ci][_sl],
+                        staleness_weight=x["disc"][_ci][_sl])
+                    return acc, loss_sum + l_sum, (
+                        new_ef if srv.error_feedback else ef)
+
+                def _skip(ring, acc, loss_sum, ef):
+                    return acc, loss_sum, ef
+
+                acc, loss_sum, ef = jax.lax.optimization_barrier(
+                    jax.lax.cond(x["count"][ci][sl] > 0, _run, _skip,
+                                 ring, acc, loss_sum, ef))
+            new_efs.append(ef if srv.error_feedback else efs[ci])
+
+        agg = jax.lax.optimization_barrier(finalize(acc))
+        cur = jax.tree.map(lambda r: r[x["cur"]], ring)
+        new_params, new_opt = jax.lax.optimization_barrier(
+            self._apply(agg, opt_state, cur, x["step"]))
+        # publish the new version over the ring slot whose version has
+        # fallen out of reach (capacity > max observed lag)
+        ring = jax.tree.map(lambda r, n: r.at[x["write"]].set(n),
+                            ring, new_params)
+        return (ring, new_opt, tuple(new_efs)), {"loss_sum": loss_sum}
+
+    def _chunk_fn(self, carry, xs, datas, mask_ones):
+        return jax.lax.scan(
+            functools.partial(self._window_body, datas=datas,
+                              mask_ones=mask_ones), carry, xs)
+
+    # -------------------------------------------------------------- host
+
+    def _plan_slots(self, plan):
+        """Host precompute of the chunk xs: per-cohort stacked group-slot
+        arrays replaying ``window_groups`` exactly — participation masks,
+        version-ring indices, participant counts, and the staleness
+        discount computed with the eager path's float64 expression."""
+        srv = self.server
+        W, C = plan.n_windows, len(srv.cohorts)
+        per_win = [window_groups(srv._slots, plan.client[w],
+                                 plan.upload_version[w])
+                   for w in range(W)]
+        for gs in per_win:
+            seen = [0] * C
+            for (ci, _), _rows in gs:
+                seen[ci] += 1
+            self._n_slots = [max(a, b) for a, b in zip(self._n_slots, seen)]
+        cap = self._cap
+        part = [np.zeros((W, self._n_slots[ci], c.size), np.float32)
+                for ci, c in enumerate(srv.cohorts)]
+        slot = [np.empty((W, self._n_slots[ci]), np.int32)
+                for ci in range(C)]
+        count = [np.zeros((W, self._n_slots[ci]), np.float32)
+                 for ci in range(C)]
+        disc = [np.ones((W, self._n_slots[ci]), np.float32)
+                for ci in range(C)]
+        versions = plan.version0 + np.arange(W)
+        for ci in range(C):
+            slot[ci][:] = (versions % cap)[:, None]     # padded: live params
+        for w, gs in enumerate(per_win):
+            li = [0] * C
+            for (ci, v), rows in gs:
+                sl = li[ci]
+                li[ci] += 1
+                part[ci][w, sl, rows] = 1.0
+                slot[ci][w, sl] = v % cap
+                count[ci][w, sl] = len(rows)
+                disc[ci][w, sl] = np.float32(
+                    (1.0 + (int(versions[w]) - v)) ** (-srv.staleness_exp))
+        return {"part": tuple(jnp.asarray(p) for p in part),
+                "slot": tuple(jnp.asarray(s) for s in slot),
+                "count": tuple(jnp.asarray(c) for c in count),
+                "disc": tuple(jnp.asarray(d) for d in disc),
+                "cur": jnp.asarray(versions % cap, jnp.int32),
+                "write": jnp.asarray((versions + 1) % cap, jnp.int32),
+                "step": jnp.asarray(versions, jnp.int32)}
+
+    def _ring_init(self):
+        """The version store as a ring: every live version's params at
+        slot ``version % capacity``. Freshly allocated (``.at[].set`` on
+        zeros), so the ring is always engine-owned and donation-safe."""
+        srv = self.server
+        ring = jax.tree.map(
+            lambda p: jnp.zeros((self._cap,) + tuple(p.shape), p.dtype),
+            srv.params)
+        for v, pv in srv._versions.items():
+            ring = jax.tree.map(lambda r, x: r.at[v % self._cap].set(x),
+                                ring, pv)
+        return ring
+
+    def _ef_carry(self) -> tuple:
+        """Per-cohort EF residuals for the scan carry — real stacked
+        buffers only under quantization + error feedback, else leafless
+        placeholders (the eager path's re-zeroed residuals are recreated
+        in-program)."""
+        srv = self.server
+        if srv.upload_quant is None or not srv.error_feedback:
+            return tuple(() for _ in srv.cohorts)
+        return tuple(c.ef_buffer if c.ef_buffer is not None
+                     else _init_cohort_ef(c.size, self._local_structs[ci])
+                     for ci, c in enumerate(srv.cohorts))
+
+    def _owns(self, state) -> bool:
+        """True iff every array in ``state`` came out of this engine's
+        previous run (leaf identity), making it safe to donate."""
+        if self._last_out is None:
+            return False
+        prev = jax.tree.leaves(self._last_out)
+        cur = jax.tree.leaves(state)
+        return len(prev) == len(cur) and all(a is b
+                                             for a, b in zip(prev, cur))
+
+    def run(self, n_windows: int) -> list[dict]:
+        """Advance the server ``n_windows`` buffered aggregation windows
+        through the compiled scan, in chunks of ``chunk_windows`` (0 =
+        one chunk). Drop-in for ``n_windows`` eager ``step()`` calls:
+        returns the new history records (also appended to
+        ``server.history``) and leaves the server resumable by either
+        path."""
+        if n_windows < 1:
+            raise ValueError(f"n_windows must be >= 1, got {n_windows}")
+        srv = self.server
+        plan = materialize_windows(srv._sched, n_windows)
+        # ring reach: the largest version lag the plan reads or still owes
+        # at the end, plus any older version live at entry (a client
+        # mid-flight from before this run). Any capacity above that is
+        # semantically identical (slot = v % cap merely relabels), so the
+        # sizing adds slack against retraces: a PROBE materialization two
+        # fleet rotations past the run horizon catches the schedule's
+        # steady-state lag before the first compile, and the result is
+        # monotonic and rounded up to the next power of two so residual
+        # lag creep between runs cannot retrace the chunk
+        probe = materialize_windows(
+            srv._sched,
+            n_windows + 2 * -(-srv.n_clients // srv._sched.buffer_size))
+        init_lag = srv.version - min(srv._versions)
+        need = max(self._cap, probe.max_version_lag + 1, init_lag + 1)
+        self._cap = 1 << (need - 1).bit_length()
+        xs_all = self._plan_slots(plan)
+
+        opt_state, efs = srv.opt_state, self._ef_carry()
+        if not self._owns((opt_state, efs)):
+            # donated carry: never eat buffers the caller may still hold
+            opt_state, efs = jax.tree.map(jnp.array, (opt_state, efs))
+        carry = (self._ring_init(), opt_state, efs)
+        datas = tuple(c.data for c in srv.cohorts)
+
+        K = plan.buffer_size
+        chunk = self.chunk_windows or n_windows
+        recs, done = [], 0
+        while done < n_windows:
+            Wc = min(chunk, n_windows - done)
+            xs = jax.tree.map(lambda a: a[done:done + Wc], xs_all)
+            carry, metrics = self._chunk(carry, xs, datas, self._mask_ones)
+            # the chunk's single device->host sync
+            m = jax.device_get(metrics)
+            for r in range(Wc):
+                w = done + r
+                stale = plan.staleness[w]
+                rec = {
+                    "step": plan.version0 + w + 1,
+                    "t": float(plan.t[w]),
+                    "loss": float(m["loss_sum"][r]) / K,
+                    "n_updates": K,
+                    "staleness_mean": float(np.mean(stale)),
+                    "staleness_max": int(stale.max()),
+                    "n_versions_live": int(plan.n_versions_live[w]),
+                    "total_upload_bytes": sum(
+                        srv._payload_bytes[int(c)] for c in plan.client[w]),
+                }
+                srv.history.append(rec)
+                recs.append(rec)
+            done += Wc
+            self.chunks_run += 1
+        self.windows_run += n_windows
+
+        # write the advanced state back onto the server so eager step()
+        # calls (or another engine run) continue bit-identically
+        ring, opt_state, efs = carry
+        v_end = plan.version0 + n_windows
+        srv.params = jax.tree.map(lambda r: r[v_end % self._cap], ring)
+        srv.opt_state = opt_state
+        srv.version = v_end
+        uniq, counts = np.unique(plan.end_version, return_counts=True)
+        srv._versions = {int(v): (srv.params if int(v) == v_end else
+                                  jax.tree.map(
+                                      lambda r: r[int(v) % self._cap], ring))
+                         for v in uniq}
+        srv._refs = {int(v): int(c) for v, c in zip(uniq, counts)}
+        srv._sched.trace(n_windows)         # advance the heap to match
+        if srv.upload_quant is not None and srv.error_feedback:
+            for cohort, ef in zip(srv.cohorts, efs):
+                cohort.ef_buffer = ef
+        self._last_out = (opt_state, efs)
+        return recs
+
+
 def simulate_rounds(server, rounds: int, *, chunk_rounds: int = 0,
                     agg: str = "sequential") -> list[dict]:
     """Convenience: run ``rounds`` on ``server`` through a fresh
-    :class:`ScanEngine` (falls back to eager ``round()`` calls when the
-    server is not scannable). Returns the new history records."""
+    :class:`ScanEngine` / :class:`WindowScanEngine` (falls back to eager
+    ``round()`` calls when the server is neither cohort-vectorized nor
+    async). Returns the new history records."""
+    if isinstance(server, AsyncFLServer):
+        return WindowScanEngine(server,
+                                chunk_windows=chunk_rounds).run(rounds)
     if _not_scannable(server):
         return [server.round() for _ in range(rounds)]
     return ScanEngine(server, chunk_rounds=chunk_rounds,

@@ -625,6 +625,23 @@ class CohortFLServer:
 # Asynchronous staleness-aware runtime (DESIGN.md §10)
 # --------------------------------------------------------------------------
 
+def window_groups(slots: list[tuple[int, int]], clients, versions
+                  ) -> list[tuple[tuple[int, int], list[int]]]:
+    """Re-batch one aggregation window's uploads into (cohort, version)
+    groups, sorted by (cohort, version) — the apply order both async
+    paths share. ``slots[c]`` maps scheduler client ``c`` to its
+    ``(cohort index, cohort row)``; ``clients``/``versions`` are the
+    window's uploads in arrival order. Each group shares params AND plan,
+    so it is one vmapped cohort dispatch in the eager server and one
+    unrolled slot in the window-scan engine (DESIGN.md §14) — using this
+    single definition in both is part of their bit-identity story."""
+    groups: dict[tuple[int, int], list[int]] = {}
+    for c, v in zip(clients, versions):
+        ci, row = slots[int(c)]
+        groups.setdefault((ci, int(v)), []).append(row)
+    return sorted(groups.items())
+
+
 @dataclass
 class AsyncFLServer:
     """Event-driven asynchronous federated runtime (DESIGN.md §10).
@@ -730,16 +747,15 @@ class AsyncFLServer:
         win = self._sched.next_window()
         # re-batch the window's uploads into (cohort, version) groups so
         # each group shares params AND plan — one vmapped dispatch each
-        groups: dict[tuple[int, int], list[int]] = {}
-        for u in win.uploads:
-            ci, row = self._slots[u.client]
-            groups.setdefault((ci, u.version), []).append(row)
+        groups = window_groups(self._slots,
+                               [u.client for u in win.uploads],
+                               [u.version for u in win.uploads])
 
         acc = zeros_like_acc(self.params, dense_den=self.any_structured)
         loss_sum = jnp.float32(0.0)
         upload_bytes = sum(self._payload_bytes[u.client]
                            for u in win.uploads)
-        for (ci, v), rows in sorted(groups.items()):
+        for (ci, v), rows in groups:
             cohort = self.cohorts[ci]
             part = np.zeros(cohort.size, bool)
             part[rows] = True

@@ -498,20 +498,26 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
     ``rounds`` federated rounds (sync) or aggregation windows (async).
     With no model/optimizer/params it runs the paper's MLP task.
 
-    ``engine`` selects the execution strategy for cohort-runtime sync
-    scenarios (DESIGN.md §12):
+    ``engine`` selects the execution strategy for cohort-runtime
+    scenarios (DESIGN.md §12, §14):
 
-    - ``"eager"``: one ``round()`` call per round (O(#plans) dispatches +
-      one device→host sync each) — the default, and the semantics.
+    - ``"eager"``: one ``round()`` / async ``step()`` call per round
+      (O(#plans) dispatches + one device→host sync each) — the default,
+      and the semantics.
     - ``"scan"``: compile chunks of ``chunk_rounds`` rounds (default: all
-      of them) into ONE donated-buffer ``lax.scan`` program; params /
-      opt_state trajectories are bit-identical to ``"eager"``.
+      of them) into ONE donated-buffer ``lax.scan`` program — the sync
+      ``ScanEngine`` over rounds, or the async ``WindowScanEngine`` over
+      host-materialized virtual-clock windows for ``AsyncBuffered``
+      scenarios; params / opt_state trajectories are bit-identical to
+      ``"eager"`` either way.
     - ``"scan_pallas"``: ``"scan"`` with ≥2-D aggregation leaves routed
       through the fused Pallas ``grad_aggregate`` kernel (parity to
-      tolerance, not bitwise — the fused reduction reorders sums).
+      tolerance, not bitwise — the fused reduction reorders sums). The
+      async window body has no stacked-tier axis, so ``AsyncBuffered``
+      scenarios run it as plain ``"scan"``.
 
-    The async runtime (its windows are event-driven, not round-shaped)
-    and the per-client loop fall back to eager regardless of ``engine``.
+    The per-client loop (``runtime="client"``) falls back to eager
+    regardless of ``engine``.
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
@@ -521,12 +527,16 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
                                                init_seed)
     srv = build_server(scenario, model, optimizer, params,
                        clients=clients, shards=shards)
-    if engine != "eager" and scenario.runtime == "cohort" \
-            and not isinstance(scenario.timing, AsyncBuffered):
-        from repro.core.engine import ScanEngine
-        ScanEngine(srv, chunk_rounds=chunk_rounds or 0,
-                   agg="pallas" if engine == "scan_pallas"
-                   else "sequential").run(rounds)
+    if engine != "eager" and scenario.runtime == "cohort":
+        if isinstance(scenario.timing, AsyncBuffered):
+            from repro.core.engine import WindowScanEngine
+            WindowScanEngine(srv,
+                             chunk_windows=chunk_rounds or 0).run(rounds)
+        else:
+            from repro.core.engine import ScanEngine
+            ScanEngine(srv, chunk_rounds=chunk_rounds or 0,
+                       agg="pallas" if engine == "scan_pallas"
+                       else "sequential").run(rounds)
     else:
         advance = (srv.step if isinstance(scenario.timing, AsyncBuffered)
                    else srv.round)

@@ -124,6 +124,107 @@ class VirtualClockScheduler:
         return [self.next_window() for _ in range(n_windows)]
 
 
+@dataclass(frozen=True)
+class WindowPlan:
+    """The next ``n_windows`` aggregation windows of a
+    :class:`VirtualClockScheduler`, host-materialized as stacked arrays
+    (DESIGN.md §14) — what the window-scan engine compiles against.
+
+    Upload columns are in APPLY order (the order the heap pops them), so
+    row ``w`` replays window ``w`` exactly: ``client[w, k]`` uploaded a
+    round trained against global version ``upload_version[w, k]``, and
+    the window is applied against version ``version0 + w``.
+    """
+    buffer_size: int
+    version0: int                   # global version before the first window
+    t: np.ndarray                   # (W,) float64 aggregation times
+    client: np.ndarray              # (W, K) int32 upload clients, apply order
+    upload_t: np.ndarray            # (W, K) float64 arrival times
+    upload_seq: np.ndarray          # (W, K) int64 dispatch sequence numbers
+    upload_version: np.ndarray      # (W, K) int64 trained-against versions
+    n_versions_live: np.ndarray     # (W,) int32 live versions AFTER window w
+    end_version: np.ndarray         # (n_clients,) in-flight versions at end
+
+    @property
+    def n_windows(self) -> int:
+        return len(self.t)
+
+    @property
+    def staleness(self) -> np.ndarray:
+        """(W, K) per-upload staleness s = window version - upload version."""
+        w_version = self.version0 + np.arange(self.n_windows)
+        return w_version[:, None] - self.upload_version
+
+    @property
+    def max_version_lag(self) -> int:
+        """The bounded version store's required reach: the largest version
+        lag the plan ever READS (a stale upload) or still OWES at the end
+        (an in-flight client's downloaded version). A ring buffer of
+        ``max_version_lag + 1`` param copies serves every access."""
+        end_lag = (self.version0 + self.n_windows) - self.end_version
+        read_lag = self.staleness
+        return int(max(read_lag.max(initial=0), end_lag.max(initial=0)))
+
+
+def materialize_windows(sched: VirtualClockScheduler,
+                        n_windows: int) -> WindowPlan:
+    """Host-precompute ``sched``'s next ``n_windows`` windows as stacked
+    arrays WITHOUT advancing the scheduler (DESIGN.md §14).
+
+    Independent implementation on purpose: where the scheduler pops a
+    heap event-by-event, this materializer keeps one in-flight upload
+    per client (the scheduler's invariant — a client redispatches only
+    when consumed) as flat arrays and selects each window with a
+    ``np.lexsort`` over ``(t, seq)``. Identical floats by construction —
+    window times are ``start + dispatch_time(...)`` with the same
+    per-``(seed, client, dispatch)`` draws — and element-wise identity
+    with the heap's trace is property-tested in ``tests/test_async.py``.
+    """
+    if n_windows < 1:
+        raise ValueError(f"n_windows must be >= 1, got {n_windows}")
+    n, K = sched.n_clients, sched.buffer_size
+    # snapshot the per-client in-flight state (one heap entry per client)
+    t = np.empty(n, np.float64)
+    seq = np.empty(n, np.int64)
+    ver = np.empty(n, np.int64)
+    for (ut, us, uc, uv) in sched._heap:
+        t[uc], seq[uc], ver[uc] = ut, us, uv
+    disp = list(sched._dispatches)
+    next_seq = sched._seq
+    v0 = sched.version
+
+    W = n_windows
+    out = dict(t=np.empty(W, np.float64),
+               client=np.empty((W, K), np.int32),
+               upload_t=np.empty((W, K), np.float64),
+               upload_seq=np.empty((W, K), np.int64),
+               upload_version=np.empty((W, K), np.int64),
+               n_versions_live=np.empty(W, np.int32))
+    for w in range(W):
+        sel = np.lexsort((seq, t))[:K]      # (t, seq) order = apply order
+        t_agg = float(t[sel[-1]])           # last consumed upload's arrival
+        out["t"][w] = t_agg
+        out["client"][w] = sel
+        out["upload_t"][w] = t[sel]
+        out["upload_seq"][w] = seq[sel]
+        out["upload_version"][w] = ver[sel]
+        # consumed clients re-download version v0+w+1 and redispatch at
+        # the aggregation time, in apply order (seq assignment matters)
+        for c in sel:
+            t[c] = t_agg + dispatch_time(sched.times[c], sched.jitter,
+                                         sched.seed, int(c), disp[c])
+            seq[c] = next_seq
+            ver[c] = v0 + w + 1
+            disp[c] += 1
+            next_seq += 1
+        # the eager server's version store after this window: the new
+        # current version plus every version an in-flight client still
+        # trains against — and the current version is always in-flight
+        # (the consumed clients just redispatched on it)
+        out["n_versions_live"][w] = len(np.unique(ver))
+    return WindowPlan(buffer_size=K, version0=v0, end_version=ver, **out)
+
+
 def schedule_census(times: Sequence[float], buffer_size: int,
                     n_windows: int, seed: int = 0,
                     jitter: float = 0.0) -> dict:

@@ -16,7 +16,7 @@ from repro.core.aggregation import accumulate_cohort, finalize, zeros_like_acc
 from repro.core.compression import DEVICE_TIERS
 from repro.core.federated import AsyncFLServer, Client, CohortFLServer
 from repro.core.schedule import (VirtualClockScheduler, dispatch_time,
-                                 schedule_census)
+                                 materialize_windows, schedule_census)
 from repro.data import make_gaussian_dataset, partition_iid
 from repro.models import mlp
 
@@ -89,6 +89,80 @@ def test_scheduler_matches_reference(n, frac, seed, jitter):
         assert w.t == t and w.version == v
         assert tuple((u.t, u.seq, u.client, u.version)
                      for u in w.uploads) == ups
+
+
+# ----------------------- window materialization (DESIGN.md §14 tentpole)
+
+def _plan_equals_trace(plan, wins):
+    """Element-wise identity between a WindowPlan and the heap's Windows:
+    exact float times (same dispatch_time draws), clients, sequence
+    numbers, versions and stalenesses, column for column."""
+    assert plan.n_windows == len(wins)
+    for w, win in enumerate(wins):
+        assert plan.t[w] == win.t
+        assert list(plan.client[w]) == [u.client for u in win.uploads]
+        assert list(plan.upload_t[w]) == [u.t for u in win.uploads]
+        assert list(plan.upload_seq[w]) == [u.seq for u in win.uploads]
+        assert (list(plan.upload_version[w])
+                == [u.version for u in win.uploads])
+        assert tuple(plan.staleness[w]) == win.stalenesses
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(1, 10), st.floats(0.1, 1.0), st.integers(0, 10_000),
+       st.sampled_from([0.0, 0.1, 0.5]))
+def test_materialized_plan_matches_heap(n, frac, seed, jitter):
+    """The lexsort materializer and the event heap are independent
+    implementations of the same schedule: same (times, buffer_size,
+    seed, jitter) => element-wise identical windows, bit-equal float
+    times included — and materializing must not advance the scheduler."""
+    rng = np.random.default_rng(seed)
+    times = rng.uniform(0.5, 10.0, n).tolist()
+    buffer_size = max(1, min(n, int(round(frac * n))))
+    sched = VirtualClockScheduler(times, buffer_size, seed=seed,
+                                  jitter=jitter)
+    warm = seed % 3                     # plans may start mid-schedule
+    if warm:
+        sched.trace(warm)
+    before = (sched.version, sched._seq, list(sched._dispatches),
+              sorted(sched._heap))
+    plan = materialize_windows(sched, 10)
+    assert (sched.version, sched._seq, list(sched._dispatches),
+            sorted(sched._heap)) == before
+    assert plan.version0 == warm
+    _plan_equals_trace(plan, sched.trace(10))
+    # end_version is the post-trace in-flight state, and max_version_lag
+    # reaches every version the ring must serve
+    assert sorted(plan.end_version) == sorted(v for *_x, v in sched._heap)
+    assert plan.max_version_lag >= int(plan.staleness.max())
+    assert (plan.version0 + plan.n_windows - plan.end_version.min()
+            <= plan.max_version_lag)
+
+
+def test_materialized_plan_breaks_arrival_ties_by_seq():
+    """Identical round times make every arrival a tie: both paths must
+    fall back to dispatch sequence order, column for column."""
+    sched = VirtualClockScheduler([1.0] * 5, buffer_size=2, seed=3)
+    plan = materialize_windows(sched, 8)
+    assert all(np.all(np.diff(row) > 0) for row in plan.upload_seq)
+    _plan_equals_trace(plan, sched.trace(8))
+
+
+def test_materialized_plan_single_client_fleet():
+    """One client, buffer 1: every window is that client's next upload,
+    always fresh (staleness 0), version lag never exceeds 1."""
+    sched = VirtualClockScheduler([2.5], buffer_size=1, seed=1, jitter=0.2)
+    plan = materialize_windows(sched, 6)
+    assert np.all(plan.client == 0)
+    assert np.all(plan.staleness == 0)
+    assert plan.max_version_lag <= 1
+    _plan_equals_trace(plan, sched.trace(6))
+
+
+def test_materialize_validates_n_windows():
+    sched = VirtualClockScheduler([1.0, 2.0], buffer_size=1)
+    with pytest.raises(ValueError, match="n_windows"):
+        materialize_windows(sched, 0)
 
 
 def test_scheduler_validates_buffer_size():

@@ -1,0 +1,79 @@
+"""Schema smoke test for the committed ``BENCH_fl.json`` perf record.
+
+``make bench-fl`` (benchmarks/fl_bench.py ``emit_json``) regenerates the
+record at every acceptance run; CI uploads it as an artifact. This test
+never *runs* the benchmarks — it only pins the record's shape, so a
+refactor of ``emit_json`` that drops a key the dashboards (or ISSUE
+acceptance checks) read fails fast in the tier-1 suite, and so the
+committed file is guaranteed to round-trip through ``json`` unchanged.
+"""
+
+import json
+import math
+import os
+
+import pytest
+
+_RECORD = os.path.join(os.path.dirname(__file__), os.pardir, "BENCH_fl.json")
+
+
+@pytest.fixture(scope="module")
+def record():
+    assert os.path.exists(_RECORD), "BENCH_fl.json must be committed"
+    with open(_RECORD) as f:
+        return json.load(f)
+
+
+def test_record_roundtrips_through_json(record):
+    assert json.loads(json.dumps(record, sort_keys=True)) == record
+
+
+def test_record_top_level_schema(record):
+    assert record["kind"] == "fl_bench"
+    for key in ("commit", "backend", "python", "config", "rounds_per_sec",
+                "windows_per_sec", "speedup_scan_vs_eager",
+                "speedup_async_scan_vs_eager",
+                "speedup_width_vs_masked_step", "rows"):
+        assert key in record, key
+    cfg = record["config"]
+    for key in ("clients", "plans", "rounds", "async_buffer",
+                "async_windows"):
+        assert isinstance(cfg[key], int) and cfg[key] > 0, key
+
+
+def test_record_rate_sections(record):
+    for section, paths in (("rounds_per_sec", ("eager", "scan", "pallas")),
+                           ("windows_per_sec", ("eager", "scan"))):
+        for path in paths:
+            rate = record[section][path]
+            assert isinstance(rate, float) and math.isfinite(rate)
+            assert rate > 0, f"{section}.{path}"
+
+
+def test_record_rows_schema(record):
+    rows = record["rows"]
+    n = record["config"]["clients"]
+    for name in (f"fl/engine_eager_{n}", f"fl/engine_scan_{n}",
+                 f"fl/async_scan_eager_{n}", f"fl/async_scan_engine_{n}"):
+        assert name in rows, name
+    for name, row in rows.items():
+        assert name.startswith("fl/"), name
+        assert isinstance(row["us_per_call"], float), name
+        assert row["us_per_call"] > 0, name
+        assert isinstance(row["derived"], str), name
+
+
+def test_record_async_scan_acceptance(record):
+    # the ISSUE-6 acceptance floor: compiled window-scan at least 5x the
+    # eager per-window dispatch path, and both paths ending at the same
+    # loss (bit-identity's cheap observable — the full proof lives in
+    # tests/test_engine.py)
+    assert record["speedup_async_scan_vs_eager"] >= 5.0
+    rows = record["rows"]
+    n = record["config"]["clients"]
+    derived = {name: dict(kv.split("=")
+                          for kv in rows[name]["derived"].split(";"))
+               for name in (f"fl/async_scan_eager_{n}",
+                            f"fl/async_scan_engine_{n}")}
+    losses = {d["loss_w51"] for d in derived.values()}
+    assert len(losses) == 1, f"eager/scan loss diverged: {derived}"

@@ -12,8 +12,8 @@ import pytest
 from repro import optim
 from repro.configs.paper_mlp import config
 from repro.core.aggregation import accumulate_cohort, finalize, zeros_like_acc
-from repro.core.engine import ScanEngine, simulate_rounds
-from repro.core.federated import FLServer
+from repro.core.engine import ScanEngine, WindowScanEngine, simulate_rounds
+from repro.core.federated import AsyncFLServer, FLServer
 from repro.core.scenario import (AsyncBuffered, FleetSpec, FLScenario,
                                  LocalTraining, ParticipationPolicy,
                                  SyncDrop, UploadPolicy, build_server,
@@ -164,11 +164,7 @@ def test_scan_engine_record_schema_matches_eager():
             hs["total_upload_bytes"], rel=1e-6)
 
 
-def test_async_and_client_runtimes_fall_back_to_eager():
-    asy = FLScenario(fleet=_spec(8),
-                     timing=AsyncBuffered(buffer_size=8, staleness_exp=0.0))
-    res = simulate(asy, 3, engine="scan")
-    assert res.final.t is not None                  # async ran (eagerly)
+def test_client_runtime_falls_back_to_eager():
     cli = FLScenario(fleet=FleetSpec(tiers=TIERS, n_samples=64),
                      runtime="client")
     res = simulate(cli, 2, engine="scan")
@@ -204,6 +200,148 @@ def _bundle():
     """The same (model, optimizer, params) triple ``simulate()`` defaults
     to — so direct ``build_server`` runs are comparable to it."""
     return MODEL, optim.sgd(1.0), mlp.init(jax.random.PRNGKey(0), config())
+
+
+# ------------------------------- window-scan async engine (DESIGN.md §14)
+
+def _async_spec(tiers, n, **kw):
+    return FleetSpec.cycling(tiers, n, samples_per_client=8, **kw)
+
+
+ASYNC_SCENARIOS = {
+    "discount_jitter": FLScenario(
+        fleet=_async_spec(["hub", "mid", "low"], 6),
+        timing=AsyncBuffered(buffer_size=2, staleness_exp=0.5,
+                             time_jitter=0.1)),
+    "no_discount": FLScenario(
+        fleet=_async_spec(["hub", "mid", "low"], 6),
+        timing=AsyncBuffered(buffer_size=2, staleness_exp=0.0)),
+    "quant_ef": FLScenario(
+        fleet=_async_spec(["hub", "mid"], 6),
+        upload=UploadPolicy(quant="fp8_e4m3", error_feedback=True),
+        timing=AsyncBuffered(buffer_size=2, staleness_exp=0.5,
+                             time_jitter=0.1)),
+    "quant_no_ef": FLScenario(
+        fleet=_async_spec(["hub", "mid"], 6),
+        upload=UploadPolicy(quant="fp8_e4m3", error_feedback=False),
+        timing=AsyncBuffered(buffer_size=2, staleness_exp=0.5,
+                             time_jitter=0.1)),
+    "width": FLScenario(
+        fleet=_async_spec(["hub", "embedded"], 6),
+        local=LocalTraining(submodel="width"),
+        timing=AsyncBuffered(buffer_size=2, staleness_exp=0.5,
+                             time_jitter=0.1)),
+    "fedavg": FLScenario(
+        fleet=_async_spec(["hub", "mid"], 6),
+        local=LocalTraining(mode="fedavg", local_steps=2),
+        timing=AsyncBuffered(buffer_size=2, staleness_exp=0.5,
+                             time_jitter=0.1)),
+}
+
+
+def _async_pair(name, optimizer=None):
+    scenario = ASYNC_SCENARIOS[name]
+    params = mlp.init(KEY, config())
+    opt = optimizer or optim.sgd(1.0)
+    return (build_server(scenario, MODEL, opt, params),
+            build_server(scenario, MODEL, opt, params))
+
+
+@pytest.mark.parametrize("name", [
+    "discount_jitter",
+    "no_discount",
+    "width",
+    pytest.param("quant_ef", marks=pytest.mark.slow),
+    pytest.param("quant_no_ef", marks=pytest.mark.slow),
+    pytest.param("fedavg", marks=pytest.mark.slow),
+])
+def test_window_scan_engine_bit_identical_to_eager(name):
+    """The async acceptance bar: the compiled window scan must replay the
+    heap scheduler's exact apply order and staleness arithmetic — params,
+    opt_state AND the full history records bit-for-bit against eager
+    ``step()`` calls, with a chunk size that does not divide the window
+    count (the staleness discount is the arithmetic that breaks first:
+    see the mask re-anchor note in ``WindowScanEngine.__post_init__``)."""
+    srv_e, srv_s = _async_pair(name)
+    for _ in range(6):
+        srv_e.step()
+    recs = WindowScanEngine(srv_s, chunk_windows=4).run(6)
+    assert _bit_identical(srv_e.params, srv_s.params)
+    assert _bit_identical(srv_e.opt_state, srv_s.opt_state)
+    assert srv_e.history == srv_s.history
+    assert recs == srv_e.history
+    assert srv_e.version == srv_s.version
+    assert sorted(srv_e._versions) == sorted(srv_s._versions)
+    assert srv_e._refs == srv_s._refs
+    if name != "no_discount":           # the discount must actually fire
+        assert any(r["staleness_max"] > 0 for r in recs)
+
+
+@pytest.mark.slow
+def test_window_scan_engine_momentum_bitwise():
+    srv_e, srv_s = _async_pair("discount_jitter", optim.momentum(0.5))
+    for _ in range(6):
+        srv_e.step()
+    WindowScanEngine(srv_s, chunk_windows=2).run(6)
+    assert _bit_identical(srv_e.params, srv_s.params)
+    assert _bit_identical(srv_e.opt_state, srv_s.opt_state)
+
+
+@pytest.mark.slow
+def test_window_scan_engine_adam_parity():
+    """Same known limit as the sync engine: Adam's param update compiles
+    with a one-ulp difference inside the scan, so parity not bitwise."""
+    srv_e, srv_s = _async_pair("discount_jitter", optim.adam(0.05))
+    for _ in range(6):
+        srv_e.step()
+    WindowScanEngine(srv_s, chunk_windows=2).run(6)
+    for a, b in zip(jax.tree.leaves((srv_e.params, srv_e.opt_state)),
+                    jax.tree.leaves((srv_s.params, srv_s.opt_state))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-6)
+
+
+def test_window_scan_engine_interleaves_with_eager_steps():
+    """The server stays the source of truth: eager windows, then engine
+    windows, then eager again — one trajectory, bit-identical to all-
+    eager, with the version store and scheduler kept in lockstep."""
+    srv_e, srv_s = _async_pair("discount_jitter")
+    for _ in range(6):
+        srv_e.step()
+    eng = WindowScanEngine(srv_s)
+    srv_s.step()
+    eng.run(2)
+    srv_s.step()
+    eng.run(2)
+    assert _bit_identical(srv_e.params, srv_s.params)
+    assert _bit_identical(srv_e.opt_state, srv_s.opt_state)
+    assert srv_e.history == srv_s.history
+    assert eng.chunks_run == 2 and eng.windows_run == 4
+
+
+def test_window_scan_engine_simulate_rounds_dispatch():
+    """``simulate_rounds`` routes AsyncFLServer through the window-scan
+    engine (no more eager fallback) and matches eager ``step()``s."""
+    srv_e, srv_s = _async_pair("no_discount")
+    for _ in range(3):
+        srv_e.step()
+    recs = simulate_rounds(srv_s, 3)
+    assert len(recs) == 3
+    assert _bit_identical(srv_e.params, srv_s.params)
+    assert srv_e.history == srv_s.history
+
+
+def test_window_scan_engine_rejects_bad_args():
+    srv_sync = build_server(FLScenario(fleet=_spec(8)), *_bundle())
+    with pytest.raises(TypeError, match="async buffered"):
+        WindowScanEngine(srv_sync)
+    srv, _ = _async_pair("no_discount")
+    with pytest.raises(ValueError, match="chunk_windows"):
+        WindowScanEngine(srv, chunk_windows=-1)
+    eng = WindowScanEngine(srv)
+    with pytest.raises(ValueError, match="n_windows"):
+        eng.run(0)
+    assert isinstance(srv, AsyncFLServer)
 
 
 # ------------------------------------------------- pallas aggregation

@@ -184,6 +184,32 @@ def test_scenario_roundtrips_through_json(scenario):
     assert hash(back) == hash(scenario)            # frozen + hashable
 
 
+def test_async_scenario_json_roundtrip_reruns_bitwise_under_scan():
+    """Serialization is part of the reproducibility contract (DESIGN.md
+    §14): an AsyncBuffered scenario shipped through JSON and rebuilt must
+    re-run under the window-scan engine to the BIT-identical trajectory —
+    params, opt_state and every round record — of both the original spec
+    under scan and the original spec run eagerly."""
+    scenario = FLScenario(
+        fleet=FleetSpec.cycling(("hub", "mid", "low"), 6,
+                                samples_per_client=8),
+        timing=AsyncBuffered(buffer_size=2, staleness_exp=0.5,
+                             time_jitter=0.1))
+    back = FLScenario.from_dict(json.loads(json.dumps(scenario.to_dict())))
+    assert back == scenario
+    kw = dict(model=MODEL, optimizer=optim.sgd(1.0),
+              params=mlp.init(KEY, config()))
+    eager = simulate(scenario, 5, **kw)
+    scan = simulate(scenario, 5, engine="scan", chunk_rounds=3, **kw)
+    rewire = simulate(back, 5, engine="scan", chunk_rounds=3, **kw)
+    _assert_trees_equal(scan.params, rewire.params)
+    _assert_trees_equal(scan.opt_state, rewire.opt_state)
+    _assert_trees_equal(eager.params, scan.params)
+    _assert_trees_equal(eager.opt_state, scan.opt_state)
+    assert scan.records == rewire.records == eager.records
+    assert scan.final.staleness_mean is not None
+
+
 def test_timing_from_dict_rejects_unknown_kind():
     with pytest.raises(ValueError, match="unknown timing kind"):
         timing_from_dict({"kind": "warp_drive"})
