@@ -36,6 +36,13 @@ Fleets and runtimes come from the declarative scenario API (DESIGN.md
   FLOPs, not dispatch, dominate). The width-sliced step must be >=2x
   faster than the masked full-shape step, and its Eq. (1) payload is the
   exact sliced parameter count; derived = loss, payload bytes, speedup.
+- fl/submodel_pallas_{path}_{n}: fused prefix-block aggregation
+  (DESIGN.md §15) vs the sequential per-tier scatter inside the scan
+  engine on the STRUCTURED width-sliced fleet at n clients / 4 plans /
+  50 rounds — the ``structured_scatter`` kernel must deliver >=1x the
+  sequential-scatter rounds/sec with a bit-identical trajectory,
+  derived = rounds/sec, reported agg backend, compile cost and (for the
+  fused row) speedup over the sequential scatter.
 - fl/eq1_{tier}: the paper's Eq. (1) analytic round time per device tier
   for the granite-3-2b model, derived = component breakdown.
 - fl/tierstep_{arch}: one datacenter tier-scanned hetero train step
@@ -235,6 +242,40 @@ def _submodel_rows() -> list[tuple]:
     return rows
 
 
+def _submodel_pallas_rows() -> list[tuple]:
+    """Fused prefix-block aggregation vs the sequential scatter on a
+    STRUCTURED fleet (the ISSUE-7 acceptance config): the scan engine at
+    256 clients / 4 width-sliced plans / 50 rounds, agg="sequential"
+    (per-tier ``scatter_accumulate`` chain) vs agg="pallas" (one
+    ``structured_scatter`` kernel pass per leaf, DESIGN.md §15). Same
+    warm+timed protocol as the fl/engine_* rows; the two trajectories
+    are bit-identical (pinned by tests/test_structured.py), so the
+    derived losses must match."""
+    from repro.core.engine import ScanEngine
+    spec = _fleet_spec(ENGINE_N)
+    clients = spec.build_clients()
+    scenario = FLScenario(fleet=spec, local=LocalTraining(submodel="width"))
+    rows, rps = [], {}
+    for path, agg in (("scan", "sequential"), ("fused", "pallas")):
+        srv = _mlp_server(scenario, clients=clients)
+        eng = ScanEngine(srv, chunk_rounds=ENGINE_ROUNDS, agg=agg)
+        t0 = time.perf_counter()
+        warm = eng.run(ENGINE_ROUNDS + 1)
+        compile_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        eng.run(ENGINE_ROUNDS)
+        us = (time.perf_counter() - t0) / ENGINE_ROUNDS * 1e6
+        rps[path] = 1e6 / us
+        derived = (f"rounds_per_sec={rps[path]:.1f};"
+                   f"agg_backend={eng.agg_backend};"
+                   f"compile_s={compile_s:.2f};"
+                   f"loss_round51={warm[-1]['loss']:.4f}")
+        if path == "fused":
+            derived += f";speedup_vs_scan={rps['fused'] / rps['scan']:.2f}x"
+        rows.append((f"fl/submodel_pallas_{path}_{ENGINE_N}", us, derived))
+    return rows
+
+
 ASYNC_N = 256
 ASYNC_ROUNDS = 50
 ASYNC_BUFFER = 64
@@ -364,6 +405,7 @@ def run() -> list[tuple]:
     rows += _async_rows()
     rows += _async_scan_rows()
     rows += _submodel_rows()
+    rows += _submodel_pallas_rows()
 
     gcfg = get_smoke_config("granite-3-2b")
     gmodel = get_model(gcfg)
@@ -396,33 +438,43 @@ def run() -> list[tuple]:
     return rows
 
 
-def _commit_hash() -> str:
+def _commit_hash() -> tuple:
+    """(HEAD sha, dirty-tree flag) of the checkout the bench ACTUALLY ran
+    in. ``git rev-parse HEAD`` is asked first — not ``GITHUB_SHA`` — so a
+    locally regenerated record carries the vintage of the tree that
+    produced the numbers rather than whatever CI env var leaked into the
+    shell; the porcelain dirty flag marks records produced mid-edit.
+    tests/test_bench_record.py pins both fields on the committed record."""
     import os
     import subprocess
-    sha = os.environ.get("GITHUB_SHA")
-    if sha:
-        return sha
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def _git(*args):
+        return subprocess.run(["git", *args], capture_output=True,
+                              text=True, check=True, cwd=root).stdout
+
     try:
-        return subprocess.run(["git", "rev-parse", "HEAD"],
-                              capture_output=True, text=True, check=True,
-                              cwd=os.path.dirname(os.path.dirname(
-                                  os.path.abspath(__file__)))
-                              ).stdout.strip()
+        sha = _git("rev-parse", "HEAD").strip()
+        dirty = bool(_git("status", "--porcelain").strip())
+        return sha, dirty
     except Exception:
-        return "unknown"
+        return os.environ.get("GITHUB_SHA", "unknown"), False
 
 
 def emit_json(path: str) -> dict:
     """The machine-readable perf record CI tracks from PR 4 on: the
     fl/engine_* rows (the ISSUE-4 acceptance numbers), from PR 5 the
-    fl/submodel_* rows (masked vs width-sliced cohort step), and from
-    PR 6 the fl/async_scan_* rows (window-scan async engine vs eager
-    windows), plus commit hash, written to ``path``. Runs ONLY those
-    sections — cheap enough for every CI run; ``make bench-fl`` is the
-    local entry point."""
+    fl/submodel_* rows (masked vs width-sliced cohort step), from PR 6
+    the fl/async_scan_* rows (window-scan async engine vs eager
+    windows), and from PR 7 the fl/submodel_pallas_* rows (fused
+    prefix-block aggregation vs sequential scatter on the structured
+    fleet), plus commit provenance (HEAD sha + dirty flag), written to
+    ``path``. Runs ONLY those sections — cheap enough for every CI run;
+    ``make bench-fl`` is the local entry point."""
     import json
     import platform
-    rows = _engine_rows() + _async_scan_rows() + _submodel_rows()
+    rows = (_engine_rows() + _async_scan_rows() + _submodel_rows()
+            + _submodel_pallas_rows())
     by_name = {name: {"us_per_call": us, "derived": derived}
                for name, us, derived in rows}
 
@@ -436,9 +488,15 @@ def emit_json(path: str) -> dict:
     def _sub_us(name):
         return by_name[f"fl/submodel_{name}_{SUBMODEL_N}"]["us_per_call"]
 
+    def _srps(name):
+        return 1e6 / by_name[
+            f"fl/submodel_pallas_{name}_{ENGINE_N}"]["us_per_call"]
+
+    commit, dirty = _commit_hash()
     record = {
         "kind": "fl_bench",
-        "commit": _commit_hash(),
+        "commit": commit,
+        "dirty": dirty,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "config": {"clients": ENGINE_N, "plans": len(SCALE_TIERS),
@@ -447,11 +505,14 @@ def emit_json(path: str) -> dict:
                    "async_windows": ASYNC_SCAN_WINDOWS},
         "rounds_per_sec": {"eager": _rps("eager"), "scan": _rps("scan"),
                            "pallas": _rps("pallas")},
+        "rounds_per_sec_structured": {"scan": _srps("scan"),
+                                      "fused": _srps("fused")},
         "windows_per_sec": {"eager": _wps("eager"),
                             "scan": _wps("engine")},
         "speedup_scan_vs_eager": _rps("scan") / _rps("eager"),
         "speedup_async_scan_vs_eager": _wps("engine") / _wps("eager"),
         "speedup_width_vs_masked_step": _sub_us("masked") / _sub_us("width"),
+        "speedup_structured_fused_vs_scan": _srps("fused") / _srps("scan"),
         "rows": by_name,
     }
     with open(path, "w") as f:
@@ -469,7 +530,10 @@ if __name__ == "__main__":
               f"scan {rec['rounds_per_sec']['scan']:.1f} rounds/s, "
               f"{rec['speedup_scan_vs_eager']:.1f}x vs eager; "
               f"async scan {rec['windows_per_sec']['scan']:.1f} windows/s, "
-              f"{rec['speedup_async_scan_vs_eager']:.1f}x vs eager "
+              f"{rec['speedup_async_scan_vs_eager']:.1f}x vs eager; "
+              f"structured fused "
+              f"{rec['rounds_per_sec_structured']['fused']:.1f} rounds/s, "
+              f"{rec['speedup_structured_fused_vs_scan']:.2f}x vs scan "
               f"@ {rec['config']['clients']} clients")
     else:
         for name, us, derived in run():

@@ -55,17 +55,26 @@ Aggregation backends
 --------------------
 ``agg="sequential"`` (default) replays the eager accumulate/finalize
 chain — bit-identical, O(#cohorts) passes over the gradient tree.
-``agg="pallas"`` routes every ≥2-D leaf through the fused
-``grad_aggregate`` Pallas kernel instead: cohort update-sums and masks
-are stacked on a tier axis and the kernel computes numerator,
-denominator (with the cohort form's separate ``w·n_part`` denominator
-weights) and divide in one pass. The fused reduction reorders the
-tier-axis sum, so it is parity-tested to tolerance (not bitwise) against
-``aggregation.finalize``; scalar-denominator leaves (1-D, router) keep
-the sequential path. Structured (width-sliced, DESIGN.md §13) cohorts
-produce SUB-shaped uploads that cannot stack on the kernel's tier axis,
-so a fleet containing any structured cohort keeps the sequential
-coverage-counted scatter path even under ``agg="pallas"``.
+``agg="pallas"`` fuses the aggregation, picking the kernel by fleet
+shape (the backend actually used is reported as ``agg_backend``):
+
+- masked fleets (no width-sliced cohort) stack update-sums and masks on
+  a tier axis and run the ``grad_aggregate`` kernel per ≥2-D leaf
+  (numerator/denominator with the cohort form's separate ``w·n_part``
+  denominator weights). Its fused reduction reorders the tier-axis sum,
+  so this path is parity-tested to tolerance (not bitwise) against
+  ``aggregation.finalize``; scalar-denominator leaves (1-D, router)
+  keep the sequential formula leaf-wise. Reported ``"pallas"``.
+- structured fleets (any cohort with a real width slice) run EVERY leaf
+  through the prefix-block ``structured_scatter`` kernel (DESIGN.md
+  §15): each tier's sub-shaped upload is a static contiguous prefix
+  block of the leaf's 2-D view, and the kernel fuses numerator scatter,
+  dense coverage-counted denominator and the final divide into one
+  VMEM pass per leaf, accumulating in cohort order — BITWISE equal to
+  the sequential ``scatter_accumulate`` chain (masked cohorts ride the
+  same tier axis as full-width blocks). Reported ``"pallas_structured"``.
+  A width=1.0 fleet has identity slices, no real slicing, and takes the
+  masked path — bit-identical to it by construction.
 
 Use it via ``simulate(scenario, rounds, engine="scan", chunk_rounds=N)``
 (``core/scenario.py``) — the async and per-client runtimes fall back to
@@ -148,13 +157,12 @@ class ScanEngine:
         self._local_structs = [_local_param_struct(srv.params, c.plan)
                                for c in srv.cohorts]
         self._any_structured = srv.any_structured
-        if self.agg == "pallas" and self._any_structured:
-            import warnings
-            warnings.warn(
-                "agg='pallas': structured (width-sliced) cohorts cannot "
-                "stack on the kernel's tier axis, so this fleet "
-                "aggregates through the sequential scatter path instead "
-                "(DESIGN.md §13)", stacklevel=2)
+        # a width=1.0 plan is structured but slices nothing (identity
+        # spec): only REAL slices route agg="pallas" to the prefix-block
+        # kernel; identity-spec fleets keep the masked kernel path and
+        # stay bit-identical to it (DESIGN.md §15)
+        self._any_sliced = any(s is not None and not s.is_identity
+                               for s in self._specs)
         # Eq. (1) per-client constants: host float64 for the drop masks
         # (bit-identical to the eager comparison); f32 device copies for
         # the in-program wall max and byte sums, so those two RECORD
@@ -168,6 +176,16 @@ class ScanEngine:
         # the raw twin of the jitted apply the eager round dispatches
         _, self._apply = _apply_fns(srv.optimizer, srv.mode, srv.server_lr)
         self._chunk = jax.jit(self._chunk_fn, donate_argnums=(0,))
+
+    @property
+    def agg_backend(self) -> str:
+        """The aggregation backend this engine ACTUALLY runs (the
+        observable the ``agg=`` knob maps to): ``"sequential"``, the
+        masked ``"pallas"`` kernel, or the prefix-block
+        ``"pallas_structured"`` kernel for width-sliced fleets."""
+        if self.agg != "pallas":
+            return "sequential"
+        return "pallas_structured" if self._any_sliced else "pallas"
 
     # ------------------------------------------------------------ device
 
@@ -184,13 +202,65 @@ class ScanEngine:
                                      jnp.float32(weight), count)
         return finalize(acc)
 
+    def _aggregate_pallas_structured(self, params, per_cohort):
+        """Prefix-block fused aggregation (DESIGN.md §15): EVERY leaf
+        runs the ``structured_scatter`` kernel — each cohort's sub-shaped
+        (update_sum, masks) is a static prefix block of the leaf's 2-D
+        view, masked cohorts ride the same tier axis as full-width
+        blocks, and numerator scatter, dense denominator and divide fuse
+        into one VMEM pass per leaf. Accumulation order and op shapes
+        replay ``scatter_accumulate`` -> ``finalize`` exactly, so this
+        backend is BITWISE, not parity (pinned in test_structured.py).
+
+        Leaves whose (global shape, per-tier local shapes, per-tier
+        mask kinds) signature repeats — the paper MLP's hidden layers
+        and their biases — are STACKED and aggregated in one batched
+        kernel call: the round body's aggregation cost is XLA op
+        dispatch, not bytes, and batching is what puts this backend
+        ahead of the sequential scatter (fl/submodel_pallas_* rows)."""
+        from repro.kernels.structured_scatter.ops import (
+            structured_scatter, structured_scatter_batched)
+        leaves_p, treedef = jax.tree_util.tree_flatten(params)
+        leaves_g = [jax.tree.leaves(g) for (g, _, _, _) in per_cohort]
+        leaves_m = [jax.tree.leaves(m) for (_, m, _, _) in per_cohort]
+        wn = jnp.asarray([w for (_, _, w, _) in per_cohort], jnp.float32)
+        # the denominator column rounds w·n_part one multiply early,
+        # exactly like scatter_accumulate's ``m * (weight * count)``
+        wd = jnp.stack([jnp.float32(w) * c for (_, _, w, c) in per_cohort])
+        groups: dict = {}
+        for li, p in enumerate(leaves_p):
+            sig = (tuple(p.shape),
+                   tuple(tuple(lg[li].shape) for lg in leaves_g),
+                   tuple(getattr(lm[li], "ndim", 0) == 0
+                         for lm in leaves_m))
+            groups.setdefault(sig, []).append(li)
+        out: list = [None] * len(leaves_p)
+        for (shape, _locals, _mkinds), lis in groups.items():
+            if len(lis) == 1:
+                li = lis[0]
+                out[li] = structured_scatter(
+                    [lg[li] for lg in leaves_g],
+                    [lm[li] for lm in leaves_m],
+                    wn, wd, out_shape=shape)
+                continue
+            gs = [jnp.stack([lg[li] for li in lis]) for lg in leaves_g]
+            ms = [jnp.stack([lm[li] for li in lis]) for lm in leaves_m]
+            res = structured_scatter_batched(gs, ms, wn, wd,
+                                             out_shape=shape)
+            for j, li in enumerate(lis):
+                out[li] = res[j]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
     def _aggregate_pallas(self, params, per_cohort):
-        """Fused-kernel aggregation: stack the cohorts on a tier axis and
-        run ``grad_aggregate`` once per ≥2-D leaf (numerator weights
-        ``w``, denominator weights ``w·n_part`` — the cohort accumulator
-        form). Scalar-denominator leaves (1-D params, excluded ≥2-D
-        leaves have broadcast masks and still take the kernel) fall back
-        to the sequential formula leaf-wise."""
+        """Fused-kernel aggregation: structured fleets take the
+        prefix-block kernel (bitwise); masked fleets stack the cohorts
+        on a tier axis and run ``grad_aggregate`` once per ≥2-D leaf
+        (numerator weights ``w``, denominator weights ``w·n_part`` — the
+        cohort accumulator form). Scalar-denominator leaves (1-D params,
+        excluded ≥2-D leaves have broadcast masks and still take the
+        kernel) fall back to the sequential formula leaf-wise."""
+        if self._any_sliced:
+            return self._aggregate_pallas_structured(params, per_cohort)
         from repro.kernels.grad_aggregate import grad_aggregate
         leaves_p, treedef = jax.tree_util.tree_flatten(params)
         leaves_g = [jax.tree.leaves(g) for (g, _, _, _) in per_cohort]
@@ -245,11 +315,8 @@ class ScanEngine:
             up_bytes = up_bytes + jnp.dot(part, self._payload_dev[ci])
             n_part = n_part + jnp.sum(part)
 
-        # structured cohorts' sub-shaped uploads cannot stack on the
-        # kernel's tier axis, so they keep the sequential scatter path
-        # even under agg="pallas" (documented in the module docstring)
         agg = (self._aggregate_pallas(params, per_cohort)
-               if self.agg == "pallas" and not self._any_structured
+               if self.agg == "pallas"
                else self._aggregate_sequential(params, per_cohort))
         # barriers bracket the apply exactly like its eager jit boundary,
         # so the update subgraph compiles identically in both paths
@@ -489,6 +556,15 @@ class WindowScanEngine:
         self._mask_ones = tuple(self._mask_ones)
         _, self._apply = _apply_fns(srv.optimizer, srv.mode, srv.server_lr)
         self._chunk = jax.jit(self._chunk_fn, donate_argnums=(0,))
+
+    @property
+    def agg_backend(self) -> str:
+        """The window body has no stacked-tier aggregation axis (groups
+        arrive one (cohort, version) slot at a time), so the async
+        engine always aggregates through the sequential scatter chain —
+        reported honestly so ``engine="scan_pallas"`` on an async
+        scenario is an OBSERVABLE no-op, not a silent one."""
+        return "sequential"
 
     # ------------------------------------------------------------ device
 

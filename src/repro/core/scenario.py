@@ -394,6 +394,12 @@ class RunResult:
     params: Any
     opt_state: Any
     server: Any
+    # the aggregation backend the run ACTUALLY used ("sequential",
+    # "pallas", or "pallas_structured") — engine="scan_pallas" requests
+    # are resolved by fleet shape and runtime, so degradation (e.g. the
+    # async window engine, which has no pallas backend) is observable
+    # here instead of silent
+    agg_backend: str = "sequential"
 
     @property
     def final(self) -> RoundRecord:
@@ -510,14 +516,17 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
       host-materialized virtual-clock windows for ``AsyncBuffered``
       scenarios; params / opt_state trajectories are bit-identical to
       ``"eager"`` either way.
-    - ``"scan_pallas"``: ``"scan"`` with ≥2-D aggregation leaves routed
-      through the fused Pallas ``grad_aggregate`` kernel (parity to
-      tolerance, not bitwise — the fused reduction reorders sums). The
-      async window body has no stacked-tier axis, so ``AsyncBuffered``
-      scenarios run it as plain ``"scan"``.
+    - ``"scan_pallas"``: ``"scan"`` with fused Pallas aggregation —
+      masked fleets route ≥2-D leaves through ``grad_aggregate``
+      (parity to tolerance, not bitwise — its fused reduction reorders
+      sums); structured (width-sliced) fleets route EVERY leaf through
+      the prefix-block ``structured_scatter`` kernel, which is BITWISE
+      (DESIGN.md §15). The async window body has no stacked-tier axis,
+      so ``AsyncBuffered`` scenarios run it as plain ``"scan"``.
 
     The per-client loop (``runtime="client"``) falls back to eager
-    regardless of ``engine``.
+    regardless of ``engine``. The backend actually used is reported as
+    ``result.agg_backend``.
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
@@ -527,16 +536,18 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
                                                init_seed)
     srv = build_server(scenario, model, optimizer, params,
                        clients=clients, shards=shards)
+    agg_backend = "sequential"
     if engine != "eager" and scenario.runtime == "cohort":
         if isinstance(scenario.timing, AsyncBuffered):
             from repro.core.engine import WindowScanEngine
-            WindowScanEngine(srv,
-                             chunk_windows=chunk_rounds or 0).run(rounds)
+            eng = WindowScanEngine(srv, chunk_windows=chunk_rounds or 0)
         else:
             from repro.core.engine import ScanEngine
-            ScanEngine(srv, chunk_rounds=chunk_rounds or 0,
-                       agg="pallas" if engine == "scan_pallas"
-                       else "sequential").run(rounds)
+            eng = ScanEngine(srv, chunk_rounds=chunk_rounds or 0,
+                             agg="pallas" if engine == "scan_pallas"
+                             else "sequential")
+        agg_backend = eng.agg_backend
+        eng.run(rounds)
     else:
         advance = (srv.step if isinstance(scenario.timing, AsyncBuffered)
                    else srv.round)
@@ -545,7 +556,8 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
     return RunResult(scenario=scenario,
                      records=tuple(RoundRecord.from_history(h)
                                    for h in srv.history),
-                     params=srv.params, opt_state=srv.opt_state, server=srv)
+                     params=srv.params, opt_state=srv.opt_state, server=srv,
+                     agg_backend=agg_backend)
 
 
 # -------------------------------------------------------------- census

@@ -6,6 +6,9 @@ The paper's platform trains *compressed* models; on TPU the hot-spots are:
                      (the dense masked weight never round-trips to HBM)
   - codebook_matmul: clustered-weight matmul, codebook decoded tile-by-tile
   - grad_aggregate:  fused mask-aware hetero gradient aggregation
+  - structured_scatter: fused prefix-block aggregation of width-sliced
+                     (structured) tier uploads into the dense
+                     coverage-counted accumulators
   - flash_attention: online-softmax attention (causal / sliding-window /
                      GQA via BlockSpec index mapping) — the prefill
                      memory-roofline hot-spot
@@ -18,4 +21,5 @@ from repro.kernels.fake_quant.ops import fake_quant  # noqa: F401
 from repro.kernels.masked_matmul.ops import masked_matmul  # noqa: F401
 from repro.kernels.codebook_matmul.ops import codebook_matmul  # noqa: F401
 from repro.kernels.grad_aggregate.ops import grad_aggregate  # noqa: F401
+from repro.kernels.structured_scatter.ops import structured_scatter  # noqa: F401
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401

@@ -26,6 +26,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def divide_guarded(num, den, eps: float):
+    """The aggregation family's shared final divide — op for op
+    ``aggregation.finalize``'s ``n / max(d, eps)``: coordinates nobody
+    covers (den 0, and num an exact 0 by the mask algebra) come out as
+    EXACT ``0/eps = 0.0``. Both this kernel and the prefix-block
+    ``structured_scatter`` kernel (DESIGN.md §15) end in this guard, so
+    their padded/uncovered coordinates are bitwise zeros by the same
+    argument."""
+    return num / jnp.maximum(den, eps)
+
+
 def _agg_kernel(g_ref, m_ref, wn_ref, wd_ref, o_ref, *, eps: float):
     g = g_ref[...].astype(jnp.float32)          # (T, bn)
     m = m_ref[...].astype(jnp.float32)
@@ -33,7 +44,7 @@ def _agg_kernel(g_ref, m_ref, wn_ref, wd_ref, o_ref, *, eps: float):
     wd = wd_ref[...].astype(jnp.float32)        # (T, 1)
     num = jnp.sum(wn * m * g, axis=0)
     den = jnp.sum(wd * m, axis=0)
-    o_ref[...] = (num / jnp.maximum(den, eps))[None, :].astype(o_ref.dtype)
+    o_ref[...] = divide_guarded(num, den, eps)[None, :].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "eps", "interpret"))

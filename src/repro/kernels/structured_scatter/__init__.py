@@ -1,0 +1,1 @@
+from repro.kernels.structured_scatter.ops import structured_scatter  # noqa: F401

@@ -1,0 +1,174 @@
+"""Pallas kernel: fused prefix-block structured-scatter aggregation —
+the coverage-counted accumulators of ``core/aggregation.py`` for one
+parameter leaf, computed in a single VMEM pass (DESIGN.md §15):
+
+    out[i] = sum_t wn[t]*cov_t[i]*m_t[i]*g_t[i]
+             / max(sum_t wd[t]*cov_t[i]*m_t[i], eps)
+
+where tier t's coverage ``cov_t`` is a STATIC contiguous prefix block:
+a width-sliced sub-model's update for a leaf ``(d0, ..., dk)`` lands on
+rows ``[0, prod(local[:-1]))`` x cols ``[0, local[-1])`` of the leaf's
+2-D row-major view — mid axes pass through at full size (structured.py),
+so the flattened row range really is a prefix. That makes the whole
+block map static per :class:`SubmodelSpec`: no indices ride the data.
+
+Layout: tier inputs arrive as SEPARATE 2-D operands (their shapes
+differ — that is the point of structured compression; they cannot stack
+on one tier axis), each zero-padded up to a multiple of the block shape.
+The grid tiles the GLOBAL leaf; per-tier BlockSpec index maps CLAMP to
+the tier's last in-bounds block, and the kernel body gates each tier's
+contribution on ``program_id < n_blocks_t`` — statically skipped for
+full-coverage tiers (masked plans ride the same tier axis with
+full-width blocks and plain adds). Partially covered edge blocks need
+no gate at all: the zero-padded mask makes their out-of-coverage
+contributions EXACT zeros, and adding 0.0 to a finite f32 accumulator
+is bitwise identity (the invariant the scan engines already rest on).
+
+Bit-identity contract: contributions accumulate in tier (= cohort)
+order as ``acc + m * (wn_t * g)`` / ``acc + m * wd_t`` — op for op the
+``scatter_accumulate`` -> ``finalize`` chain, association invariant
+included (the multiply feeding each add is the exact 0/1-mask product,
+so FMA contraction is bit-transparent; see ``accumulate_cohort``). The
+final divide is shared with ``grad_aggregate`` (:func:`divide_guarded`),
+as are the ``(T, 1)`` numerator/denominator weight columns
+(``wn = w``, ``wd = w·n_participants``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.grad_aggregate.kernel import divide_guarded
+
+
+def _scatter_kernel(*refs, n_tiers: int, nb: tuple, full: tuple,
+                    eps: float):
+    """refs: g_0, m_0, ..., g_{T-1}, m_{T-1}, wn, wd, out.
+
+    ``nb[t]`` is tier t's (row-blocks, col-blocks) extent on the grid;
+    ``full[t]`` statically marks tiers whose extent covers the whole
+    grid (no gate needed — the masked-plan fast path)."""
+    o_ref = refs[-1]
+    wn_ref, wd_ref = refs[-3], refs[-2]
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    num = jnp.zeros(o_ref.shape, jnp.float32)
+    den = jnp.zeros(o_ref.shape, jnp.float32)
+    for t in range(n_tiers):
+        g = refs[2 * t][...].astype(jnp.float32)
+        m = refs[2 * t + 1][...].astype(jnp.float32)
+        wn_t = wn_ref[t, 0]
+        wd_t = wd_ref[t, 0]
+        # association invariant: the add consumes the exact 0/1-mask
+        # product, any inexact scalar product rounds one multiply earlier
+        add_n = m * (wn_t * g)
+        add_d = m * wd_t
+        if full[t]:
+            num = num + add_n
+            den = den + add_d
+        else:
+            cov = (i < nb[t][0]) & (j < nb[t][1])
+            num = jnp.where(cov, num + add_n, num)
+            den = jnp.where(cov, den + add_d, den)
+    o_ref[...] = divide_guarded(num, den, eps).astype(o_ref.dtype)
+
+
+def _scatter_kernel_whole(*refs, n_tiers: int, ext: tuple, eps: float):
+    """Gridless whole-leaf variant (the interpret-mode hot path): refs
+    carry each tier's UNPADDED local 2-D view — optionally with leading
+    batch dims stacking same-shaped leaves — and a partial tier's
+    contribution lands via a STATIC prefix-slice ``.at[].add`` on the
+    trailing two axes, the very op ``scatter_accumulate`` uses, so the
+    bitwise contract holds by construction. Masks may be (..., 1, 1)
+    scalars; they broadcast inside the arithmetic. No BlockSpec
+    machinery, no padding traffic: on CPU the tile quanta that the
+    gridded path pads to would cost small leaves ~20x their data, and
+    batching same-shaped leaves into one call is what takes the fused
+    round past the sequential scatter on op-count-bound round bodies.
+    ``ext[t]`` is tier t's trailing (rows, cols) extent; tiers matching
+    the output extent take the plain-add path."""
+    o_ref = refs[-1]
+    wn_ref, wd_ref = refs[-3], refs[-2]
+    out_sh = tuple(o_ref.shape)
+    num = jnp.zeros(out_sh, jnp.float32)
+    den = jnp.zeros(out_sh, jnp.float32)
+    for t in range(n_tiers):
+        g = refs[2 * t][...].astype(jnp.float32)
+        m = refs[2 * t + 1][...].astype(jnp.float32)
+        # association invariant: the add consumes the exact 0/1-mask
+        # product (scalar masks broadcast inside the multiply)
+        add_n = m * (wn_ref[t, 0] * g)
+        add_d = m * wd_ref[t, 0]
+        if tuple(ext[t]) == out_sh[-2:]:
+            num = num + add_n
+            den = den + add_d
+        else:
+            r, c = ext[t]
+            num = num.at[..., :r, :c].add(add_n)
+            den = den.at[..., :r, :c].add(add_d)
+    o_ref[...] = divide_guarded(num, den, eps).astype(o_ref.dtype)
+
+
+def structured_scatter_whole(gs: tuple, ms: tuple, wn: jax.Array,
+                             wd: jax.Array, *, out_rc: tuple,
+                             eps: float = 1e-8,
+                             interpret: bool = False) -> jax.Array:
+    """One gridless kernel call over the whole leaf: ``gs``/``ms`` are
+    per-tier local 2-D views at their EXACT sizes, optionally stacked
+    over leading batch dims (``ms`` entries may be (..., 1, 1) scalars),
+    ``out_rc`` the full output shape ``(..., rows, cols)``. No padding,
+    no BlockSpecs — the interpret-mode entry point, and the target of
+    the gridded path's single-block special case."""
+    ext = tuple(tuple(g.shape[-2:]) for g in gs)
+    ops = [x for pair in zip(gs, ms) for x in pair] + [wn, wd]
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel_whole, n_tiers=len(gs),
+                          ext=ext, eps=eps),
+        out_shape=jax.ShapeDtypeStruct(tuple(out_rc), jnp.float32),
+        interpret=interpret,
+    )(*ops)
+
+
+def _clamped(nbr: int, nbc: int):
+    """Index map clamping to the tier's last in-bounds block: grid steps
+    beyond the tier's extent re-read a live block (never OOB) and the
+    body's coverage gate discards the result."""
+    return lambda i, j: (jnp.minimum(i, nbr - 1), jnp.minimum(j, nbc - 1))
+
+
+def structured_scatter_raw(gs: tuple, ms: tuple, wn: jax.Array,
+                           wd: jax.Array, *, grid: tuple,
+                           block: tuple, eps: float = 1e-8,
+                           interpret: bool = False) -> jax.Array:
+    """``gs``/``ms``: per-tier 2-D views, each padded to a multiple of
+    ``block = (br, bc)``; ``wn``/``wd``: (T, 1) weight columns;
+    ``grid``: the global leaf's (row-blocks, col-blocks). Returns the
+    aggregated global view ``(grid[0]*br, grid[1]*bc)`` in f32."""
+    br, bc = block
+    n_tiers = len(gs)
+    nb = tuple((g.shape[0] // br, g.shape[1] // bc) for g in gs)
+    full = tuple(b == tuple(grid) for b in nb)
+    ops = [x for pair in zip(gs, ms) for x in pair] + [wn, wd]
+    if tuple(grid) == (1, 1):               # single block: gridless call
+        return structured_scatter_whole(gs, ms, wn, wd, out_rc=(br, bc),
+                                        eps=eps, interpret=interpret)
+    in_specs = []
+    for t in range(n_tiers):
+        idx = (lambda i, j: (i, j)) if full[t] else _clamped(*nb[t])
+        in_specs += [pl.BlockSpec((br, bc), idx),
+                     pl.BlockSpec((br, bc), idx)]
+    in_specs += [pl.BlockSpec((n_tiers, 1), lambda i, j: (0, 0)),
+                 pl.BlockSpec((n_tiers, 1), lambda i, j: (0, 0))]
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, n_tiers=n_tiers, nb=nb,
+                          full=full, eps=eps),
+        grid=tuple(grid),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0] * br, grid[1] * bc),
+                                       jnp.float32),
+        interpret=interpret,
+    )(*ops)

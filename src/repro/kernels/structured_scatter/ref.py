@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for structured_scatter: the per-leaf
+``scatter_accumulate`` -> ``finalize`` chain of ``core/aggregation.py``,
+op for op (the kernel is pinned BITWISE against this)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def structured_scatter_ref(gs, ms, w, w_den=None, *, out_shape: tuple,
+                           eps: float = 1e-8) -> jax.Array:
+    """``gs``/``ms``: per-tier local-shape update-sums and masks (masks
+    broadcastable); ``w``/``w_den``: (T,) weight columns, ``w_den``
+    defaulting to ``w``. Returns the aggregated f32 global leaf."""
+    w = jnp.asarray(w, jnp.float32).reshape(-1)
+    wd = w if w_den is None else jnp.asarray(w_den, jnp.float32).reshape(-1)
+    num = jnp.zeros(out_shape, jnp.float32)
+    den = jnp.zeros(out_shape, jnp.float32)
+    for g, m, wn_t, wd_t in zip(gs, ms, w, wd):
+        m = jnp.broadcast_to(jnp.asarray(m, jnp.float32), g.shape)
+        idx = tuple(slice(0, k) for k in g.shape)
+        num = num.at[idx].add(m * (wn_t * g))
+        den = den.at[idx].add(m * wd_t)
+    return num / jnp.maximum(den, eps)

@@ -30,11 +30,14 @@ def test_record_roundtrips_through_json(record):
 
 def test_record_top_level_schema(record):
     assert record["kind"] == "fl_bench"
-    for key in ("commit", "backend", "python", "config", "rounds_per_sec",
+    for key in ("commit", "dirty", "backend", "python", "config",
+                "rounds_per_sec", "rounds_per_sec_structured",
                 "windows_per_sec", "speedup_scan_vs_eager",
                 "speedup_async_scan_vs_eager",
+                "speedup_structured_fused_vs_scan",
                 "speedup_width_vs_masked_step", "rows"):
         assert key in record, key
+    assert isinstance(record["dirty"], bool)
     cfg = record["config"]
     for key in ("clients", "plans", "rounds", "async_buffer",
                 "async_windows"):
@@ -43,6 +46,7 @@ def test_record_top_level_schema(record):
 
 def test_record_rate_sections(record):
     for section, paths in (("rounds_per_sec", ("eager", "scan", "pallas")),
+                           ("rounds_per_sec_structured", ("scan", "fused")),
                            ("windows_per_sec", ("eager", "scan"))):
         for path in paths:
             rate = record[section][path]
@@ -54,7 +58,9 @@ def test_record_rows_schema(record):
     rows = record["rows"]
     n = record["config"]["clients"]
     for name in (f"fl/engine_eager_{n}", f"fl/engine_scan_{n}",
-                 f"fl/async_scan_eager_{n}", f"fl/async_scan_engine_{n}"):
+                 f"fl/async_scan_eager_{n}", f"fl/async_scan_engine_{n}",
+                 f"fl/submodel_pallas_scan_{n}",
+                 f"fl/submodel_pallas_fused_{n}"):
         assert name in rows, name
     for name, row in rows.items():
         assert name.startswith("fl/"), name
@@ -77,3 +83,48 @@ def test_record_async_scan_acceptance(record):
                             f"fl/async_scan_engine_{n}")}
     losses = {d["loss_w51"] for d in derived.values()}
     assert len(losses) == 1, f"eager/scan loss diverged: {derived}"
+
+
+def test_record_structured_fused_acceptance(record):
+    """The ISSUE-7 acceptance floor: the fused prefix-block structured
+    round at least matches the sequential-scatter scan path at 256
+    clients / 4 plans, each row names the backend it ACTUALLY ran
+    (the silent-fallback bugfix made that observable), and the two
+    trajectories end at the same loss."""
+    assert record["speedup_structured_fused_vs_scan"] >= 1.0
+    rows = record["rows"]
+    n = record["config"]["clients"]
+    derived = {tag: dict(kv.split("=")
+                         for kv in rows[f"fl/submodel_pallas_{tag}_{n}"]
+                         ["derived"].split(";"))
+               for tag in ("scan", "fused")}
+    assert derived["scan"]["agg_backend"] == "sequential"
+    assert derived["fused"]["agg_backend"] == "pallas_structured"
+    losses = {d["loss_round51"] for d in derived.values()}
+    assert len(losses) == 1, f"structured scan/fused loss diverged: {derived}"
+
+
+def test_record_commit_vintage(record):
+    """The stale-provenance bugfix: the record must be stamped with a
+    full 40-hex commit that is a DESCENDANT of the growth seed — a
+    record still carrying the seed commit (the pre-fix symptom, where
+    ``_commit_hash`` fell back to a baked-in env var) fails here.
+    ``dirty`` tells record readers whether the tree matched the stamp."""
+    import re
+    import subprocess
+    commit = record["commit"]
+    assert re.fullmatch(r"[0-9a-f]{40}", commit), commit
+    seed = "1fff427261575abbdd540f833f4872303276a6ef"
+    assert commit != seed, "record stamped with the seed commit"
+    repo = os.path.join(os.path.dirname(__file__), os.pardir)
+    try:
+        known = subprocess.run(
+            ["git", "cat-file", "-e", f"{commit}^{{commit}}"],
+            cwd=repo, capture_output=True).returncode == 0
+    except (OSError, subprocess.SubprocessError):
+        pytest.skip("git unavailable")
+    if not known:
+        pytest.skip("record commit not in this checkout's history")
+    anc = subprocess.run(["git", "merge-base", "--is-ancestor", seed, commit],
+                         cwd=repo, capture_output=True)
+    assert anc.returncode == 0, f"{commit} does not descend from the seed"

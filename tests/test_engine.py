@@ -362,6 +362,39 @@ def test_scan_pallas_engine_parity(name):
                                    rtol=0, atol=1e-5)
 
 
+def test_agg_backend_is_recorded_not_assumed():
+    """The silent-degradation bugfix: RunResult reports the aggregation
+    backend the engine ACTUALLY used, so a fallback can never again hide
+    behind a requested ``agg="pallas"``."""
+    sc = SCENARIOS["sync_wait_partial"]
+    assert simulate(sc, 2).agg_backend == "sequential"            # eager
+    assert simulate(sc, 2, engine="scan").agg_backend == "sequential"
+    assert simulate(sc, 2, engine="scan_pallas").agg_backend == "pallas"
+    # the async window engine has no fused aggregation path: requesting
+    # scan_pallas must still REPORT the sequential backend it runs
+    asy = FLScenario(fleet=_spec(8), timing=AsyncBuffered(buffer_size=4))
+    assert simulate(asy, 2, engine="scan_pallas").agg_backend == "sequential"
+
+
+def test_width_one_plan_level_structured_rides_masked_kernel_path():
+    """width=1.0 plans carry an identity SubmodelSpec — the engine's
+    structured dispatch keys on *actually sliced* specs, so such a fleet
+    stays on the masked grad_aggregate backend ("pallas") and remains
+    bitwise with the plain masked fleet under both backends."""
+    import dataclasses
+    sc = SCENARIOS["sync_wait_partial"]
+    clients_m = sc.fleet.build_clients()
+    clients_w = [dataclasses.replace(c, plan=dataclasses.replace(
+                     c.plan, width=1.0)) for c in clients_m]
+    runs = {}
+    for tag, cl in (("masked", clients_m), ("width1", clients_w)):
+        runs[tag] = simulate(sc, 4, clients=cl, engine="scan_pallas")
+        assert runs[tag].agg_backend == "pallas"
+    assert runs["width1"].server.any_structured
+    assert _bit_identical(runs["masked"].params, runs["width1"].params)
+    assert _bit_identical(runs["masked"].opt_state, runs["width1"].opt_state)
+
+
 def test_grad_aggregate_matches_finalize_on_cohort_accumulators():
     """Satellite parity test: the two-weight kernel form
     ``Σ w·m·g / max(Σ w·count·m, eps)`` against the reference

@@ -4,13 +4,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import (codebook_matmul, fake_quant, grad_aggregate,
-                           masked_matmul)
+                           masked_matmul, structured_scatter)
 from repro.kernels.codebook_matmul.ref import codebook_matmul_ref
 from repro.kernels.fake_quant.ref import fake_quant_ref
 from repro.kernels.grad_aggregate.ref import grad_aggregate_ref
 from repro.kernels.masked_matmul.ref import masked_matmul_ref
+from repro.kernels.structured_scatter.ops import structured_scatter_batched
+from repro.kernels.structured_scatter.ref import structured_scatter_ref
 
 KEY = jax.random.PRNGKey(0)
 
@@ -155,3 +158,168 @@ def test_grad_aggregate_broadcast_mask(shape, mshape):
     ref = grad_aggregate_ref(g.reshape(t, -1), mb, w).reshape(shape[1:])
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-6)
+
+
+# --------------------------- grad_aggregate pad-path property tests
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3000), st.integers(1, 6), st.booleans())
+def test_grad_aggregate_pad_path_roundtrips_any_size(n, t, scalar_mask):
+    """Property: for ANY leaf size (odd n exercises the ``(-n) % 1024``
+    zero-pad + unpad path) and broadcast or full masks, grad_aggregate
+    returns exactly shape (n,) matching the unpadded oracle — the padded
+    tail never leaks into ``out[:n]``."""
+    kg, km = jax.random.split(jax.random.fold_in(KEY, n * 7 + t), 2)
+    g = jax.random.normal(kg, (t, n))
+    mshape = (t, 1) if scalar_mask else (t, n)
+    m = (jax.random.uniform(km, mshape) > 0.4).astype(jnp.float32)
+    w = jnp.linspace(0.5, 2.0, t)
+    out = grad_aggregate(g, m, w)
+    assert out.shape == (n,)
+    ref = grad_aggregate_ref(g, jnp.broadcast_to(m, (t, n)), w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2047))
+def test_grad_aggregate_padded_tail_is_exact_zero(n):
+    """The pad's correctness mechanism, observed directly on the raw
+    kernel: zero-padded coordinates carry mask 0, so their denominator
+    is 0, the ``max(den, eps)`` guard kicks in, and ``0 / eps`` is an
+    EXACT 0.0 — which is why ``out[:n]`` can slice the pad off without
+    any masking arithmetic."""
+    from repro.kernels.grad_aggregate.kernel import grad_aggregate_raw
+    pad = (-n) % 1024
+    kg, km = jax.random.split(jax.random.fold_in(KEY, n), 2)
+    g = jnp.pad(jax.random.normal(kg, (3, n)), ((0, 0), (0, pad)))
+    m = jnp.pad((jax.random.uniform(km, (3, n)) > 0.4).astype(jnp.float32),
+                ((0, 0), (0, pad)))
+    w = jnp.linspace(0.5, 2.0, 3).reshape(3, 1)
+    out = grad_aggregate_raw(g, m, w, None, eps=1e-8, interpret=True)[0]
+    assert out.shape == (n + pad,)
+    tail = np.asarray(out[n:])
+    assert (tail == 0.0).all()                  # exact zeros, not just small
+    np.testing.assert_allclose(
+        np.asarray(out[:n]),
+        np.asarray(grad_aggregate_ref(g[:, :n], m[:, :n],
+                                      jnp.linspace(0.5, 2.0, 3))),
+        rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------ structured_scatter kernel
+
+def _prefix_cases():
+    """(global shape, per-tier local shapes): SubmodelSpec-style only —
+    slicing touches the FIRST and LAST axes, mid axes stay full-size
+    (the kernel's prefix-block precondition)."""
+    return [
+        ((10, 10), [(10, 10), (5, 5), (3, 3)]),          # paper-MLP hidden
+        ((5, 10), [(5, 10), (5, 5), (5, 3)]),            # input layer
+        ((10,), [(10,), (5,), (3,)]),                    # co-sliced bias
+        ((2, 6, 4), [(2, 6, 4), (1, 6, 2)]),             # 3-D, first+last
+        ((37, 129), [(37, 129), (19, 65)]),              # odd, multi-block
+        ((16, 16), [(16, 16), (16, 16)]),                # all tiers full
+    ]
+
+
+def _tiers(out_shape, locals_, seed=0, scalar_masks=False):
+    k = jax.random.fold_in(KEY, seed)
+    gs, ms = [], []
+    for i, loc in enumerate(locals_):
+        k, kg, km = jax.random.split(k, 3)
+        gs.append(jax.random.normal(kg, loc))
+        if scalar_masks:
+            ms.append(jnp.float32(i % 2))               # exact 0/1 only
+        else:
+            ms.append((jax.random.uniform(km, loc) > 0.3)
+                      .astype(jnp.float32))
+    w = jnp.linspace(0.5, 2.0, len(locals_))
+    wd = w * jnp.arange(1.0, len(locals_) + 1.0)        # w·n_participants
+    return gs, ms, w, wd
+
+
+@pytest.mark.parametrize("case", range(6))
+@pytest.mark.parametrize("scalar_masks", [False, True])
+def test_structured_scatter_bitwise_vs_ref(case, scalar_masks):
+    """The tentpole's acceptance bar: the fused kernel is BITWISE the
+    scatter_accumulate -> finalize chain, for array and scalar 0/1
+    masks, full and sliced tiers, 1-D/2-D/3-D leaves, w_den columns.
+    (The contract requires exact 0/1 masks — that is what makes the
+    kernel's FMA-contracted adds bit-transparent.)"""
+    out_shape, locals_ = _prefix_cases()[case]
+    gs, ms, w, wd = _tiers(out_shape, locals_, seed=case,
+                           scalar_masks=scalar_masks)
+    out = structured_scatter(gs, ms, w, wd, out_shape=out_shape)
+    ref = structured_scatter_ref(gs, ms, w, wd, out_shape=out_shape)
+    assert out.shape == tuple(out_shape) and out.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_structured_scatter_uncovered_coords_are_exact_zero():
+    """Coordinates no tier covers have den == 0: the max(den, eps) guard
+    turns them into EXACT 0.0 (the same mechanism the pad path uses)."""
+    gs, ms, w, wd = _tiers((10, 10), [(4, 4), (6, 2)], seed=9)
+    out = np.asarray(structured_scatter(gs, ms, w, wd,
+                                        out_shape=(10, 10)))
+    assert (out[6:, :] == 0.0).all() and (out[:, 4:] == 0.0).all()
+    assert out[:4, :4].any()                     # covered region is live
+
+
+def test_structured_scatter_default_wden_and_unsorted_tiers():
+    """w_den defaults to w, and tier ORDER (not size-sortedness) fixes
+    the accumulation sequence — shuffled tiers match the ref shuffled
+    the same way, bitwise."""
+    out_shape, locals_ = (10, 10), [(3, 3), (10, 10), (5, 5)]
+    gs, ms, w, _ = _tiers(out_shape, locals_, seed=3)
+    out = structured_scatter(gs, ms, w, out_shape=out_shape)
+    ref = structured_scatter_ref(gs, ms, w, out_shape=out_shape)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_structured_scatter_gridded_path_matches_whole():
+    """The TPU-shaped tiled wrapper (block quanta, zero-padding, clamped
+    index maps, multi-step grid) must agree bitwise with the gridless
+    whole-leaf call and the oracle — run in interpret mode with blocks
+    forced small enough that the grid really has multiple steps."""
+    from repro.kernels.structured_scatter import ops as ss_ops
+    out_shape, locals_ = (37, 300), [(37, 300), (19, 140), (7, 65)]
+    gs, ms, w, wd = _tiers(out_shape, locals_, seed=5)
+    ref = structured_scatter_ref(gs, ms, w, wd, out_shape=out_shape)
+    tiled = ss_ops._scatter_tiled(
+        gs, ms, jnp.asarray(w, jnp.float32).reshape(-1, 1),
+        jnp.asarray(wd, jnp.float32).reshape(-1, 1),
+        rows=37, cols=300, out_shape=out_shape, eps=1e-8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(ref))
+    whole = structured_scatter(gs, ms, w, wd, out_shape=out_shape,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(ref))
+
+
+@pytest.mark.parametrize("out_shape,locals_,scalar_masks", [
+    ((10, 10), [(10, 10), (5, 5), (3, 3)], False),
+    ((10, 10), [(10, 10), (5, 5), (3, 3)], True),
+    ((10,), [(10,), (5,), (3,)], True),          # 1-D bias group
+])
+def test_structured_scatter_batched_bitwise_per_leaf(out_shape, locals_,
+                                                     scalar_masks):
+    """structured_scatter_batched stacks L same-shaped leaves into ONE
+    kernel call (the engine's op-count win); every slice of the result
+    must be bitwise the per-leaf call and the oracle."""
+    L = 4
+    per = [_tiers(out_shape, locals_, seed=20 + i,
+                  scalar_masks=scalar_masks) for i in range(L)]
+    w, wd = per[0][2], per[0][3]
+    gs = [jnp.stack([per[i][0][t] for i in range(L)])
+          for t in range(len(locals_))]
+    ms = [jnp.stack([jnp.asarray(per[i][1][t]) for i in range(L)])
+          for t in range(len(locals_))]
+    res = structured_scatter_batched(gs, ms, w, wd, out_shape=out_shape)
+    assert res.shape == (L,) + tuple(out_shape)
+    for i in range(L):
+        one = structured_scatter(per[i][0], per[i][1], w, wd,
+                                 out_shape=out_shape)
+        ref = structured_scatter_ref(per[i][0], per[i][1], w, wd,
+                                     out_shape=out_shape)
+        np.testing.assert_array_equal(np.asarray(res[i]), np.asarray(one))
+        np.testing.assert_array_equal(np.asarray(res[i]), np.asarray(ref))

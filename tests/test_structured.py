@@ -105,14 +105,24 @@ def test_single_matrix_model_rejects_width_slicing():
     assert submodel_spec(two, 0.99).is_identity
 
 
-def test_scan_pallas_warns_and_falls_back_for_structured_fleets():
+def test_scan_pallas_runs_structured_fleets_fused_without_warning():
+    """The bugfix this PR exists for: ``agg="pallas"`` on a structured
+    fleet used to warn and silently fall back to the sequential scatter.
+    It now routes through the fused prefix-block kernel, records the
+    backend it actually used, and stays bitwise with the eager loop."""
+    import warnings
     scenario = FLScenario(
         fleet=FleetSpec.cycling(("hub", "mid"), 4, samples_per_client=8),
         local=LocalTraining(submodel="width"))
-    with pytest.warns(UserWarning, match="sequential scatter"):
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
         res = simulate(scenario, 2, engine="scan_pallas")
+    assert not [w for w in caught
+                if "scatter" in str(w.message) or "sequential" in str(w.message)]
+    assert res.agg_backend == "pallas_structured"
     eager = simulate(scenario, 2)
-    assert _bit_identical(eager.params, res.params)   # sequential = bitwise
+    assert eager.agg_backend == "sequential"
+    assert _bit_identical(eager.params, res.params)
 
 
 def test_expand_update_is_slice_adjoint():
@@ -303,14 +313,38 @@ WIDTH_SCENARIOS = {
 ])
 def test_scan_engine_bit_identical_for_structured_cohorts(name):
     """Structured cohorts ride the donated scan carry (sub-shaped EF,
-    in-body scatter) and must still match the eager loop bit for bit."""
+    in-body scatter) and must still match the eager loop bit for bit —
+    on BOTH engine aggregation backends: the sequential scatter and the
+    fused prefix-block Pallas kernel (DESIGN.md §15)."""
     scenario = WIDTH_SCENARIOS[name]
     eager = simulate(scenario, 5)
     scan = simulate(scenario, 5, engine="scan", chunk_rounds=2)
+    fused = simulate(scenario, 5, engine="scan_pallas", chunk_rounds=2)
     assert eager.server.any_structured
-    assert _bit_identical(eager.params, scan.params)
-    assert _bit_identical(eager.opt_state, scan.opt_state)
-    assert [r.loss for r in eager.records] == [r.loss for r in scan.records]
+    assert scan.agg_backend == "sequential"
+    assert fused.agg_backend == "pallas_structured"
+    for other in (scan, fused):
+        assert _bit_identical(eager.params, other.params)
+        assert _bit_identical(eager.opt_state, other.opt_state)
+        assert [r.loss for r in eager.records] == [r.loss
+                                                   for r in other.records]
+
+
+def test_fused_scatter_handles_mixed_masked_and_sliced_fleet():
+    """A fleet mixing full-coverage (width=1.0, identity spec) and
+    sliced tiers: the full tiers ride the same kernel tier axis as
+    plain adds, and the whole round stays bitwise with eager."""
+    scenario = FLScenario(
+        fleet=FleetSpec.cycling(("hub", "high", "low"), 6,
+                                samples_per_client=16),
+        local=LocalTraining(submodel="width"))
+    eager = simulate(scenario, 4)
+    fused = simulate(scenario, 4, engine="scan_pallas", chunk_rounds=2)
+    widths = {c.plan.width for c in eager.server.cohorts}
+    assert 1.0 in widths and len(widths) > 1      # genuinely mixed
+    assert fused.agg_backend == "pallas_structured"
+    assert _bit_identical(eager.params, fused.params)
+    assert _bit_identical(eager.opt_state, fused.opt_state)
 
 
 def test_structured_sub_shaped_ef_buffers():
