@@ -2,6 +2,10 @@
 #   make test       - the full tier-1 suite (~7 min: kernel sweeps, model
 #                     smokes, convergence runs)
 #   make test-fast  - quick loop (<90 s): everything not marked `slow`
+#   make test-shard - the fast tier over 8 forced host devices, so the
+#                     sharded-vs-unsharded bitwise pins in
+#                     tests/test_topology.py actually exercise a
+#                     multi-device mesh (they skip at 1 device)
 #   make lint       - ruff, check-only (no autofix churn); rule set is
 #                     pinned in pyproject.toml [tool.ruff]
 #   make bench-fl   - scan-engine perf record -> BENCH_fl.json (rounds/sec,
@@ -9,12 +13,16 @@
 #                     CI uploads it as an artifact per run
 PYTEST = PYTHONPATH=src python -m pytest -x -q
 
-.PHONY: test test-fast lint bench bench-fl
+.PHONY: test test-fast test-shard lint bench bench-fl
 test:
 	$(PYTEST)
 
 test-fast:
 	$(PYTEST) -m "not slow"
+
+test-shard:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PYTEST) -m "not slow" tests/test_topology.py tests/test_sharding.py
 
 lint:
 	ruff check src tests examples benchmarks

@@ -43,12 +43,29 @@ Fleets and runtimes come from the declarative scenario API (DESIGN.md
   sequential-scatter rounds/sec with a bit-identical trajectory,
   derived = rounds/sec, reported agg backend, compile cost and (for the
   fused row) speedup over the sequential scatter.
+- fl/shard_{path}_{n}: the sharded hierarchical fleet runtime
+  (DESIGN.md §16) at 100k clients / 4 plans / 8 edge groups through the
+  scan engine — unsharded vs sharded over the edge mesh
+  (``shard_fleet``; on CPU the mesh comes from the forced host devices
+  set up below). Derived = rounds/sec, scaling efficiency of the
+  sharded run, and the analytic per-round edge→hub traffic, which is
+  independent of client count.
 - fl/eq1_{tier}: the paper's Eq. (1) analytic round time per device tier
   for the granite-3-2b model, derived = component breakdown.
 - fl/tierstep_{arch}: one datacenter tier-scanned hetero train step
   (smoke config), derived = loss delta over 5 steps.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+    # the fl/shard_* rows exercise a real multi-device mesh on CPU; the
+    # forced host device count must land before the first jax import
+    # (same recipe as launch/dryrun.py). An inherited XLA_FLAGS or an
+    # already-imported jax wins — the rows then run on whatever exists.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import time
 import types
@@ -276,6 +293,68 @@ def _submodel_pallas_rows() -> list[tuple]:
     return rows
 
 
+SHARD_N = 100_000
+SHARD_EDGES = 8
+SHARD_ROUNDS = 10
+
+
+def _shard_rows() -> list[tuple]:
+    """Sharded hierarchical fleet runtime (DESIGN.md §16, the ISSUE-8
+    acceptance config): a 100k-client / 4-plan / 8-edge-group topology
+    fleet through the scan engine, unsharded (one device) vs sharded
+    over the edge mesh (``shard_fleet`` — placement only, the program
+    and trajectory are identical; the forced host devices set up at
+    module import stand in for real accelerators). Timing excludes the
+    one-off chunk compile, as in the fl/engine_* rows. The derived
+    cross_shard_bytes is the ANALYTIC per-round edge→hub traffic — a
+    function of plans and edge count only, independent of the 100k
+    client count (pinned by tests/test_topology.py)."""
+    from repro.core.engine import ScanEngine
+    from repro.core.topology import make_edge_mesh, shard_fleet
+    spec = FleetSpec.cycling(SCALE_TIERS, SHARD_N, samples_per_client=16,
+                             edges=SHARD_EDGES)
+    scenario = FLScenario(fleet=spec)
+    clients = spec.build_clients()
+    mesh = make_edge_mesh(SHARD_EDGES)
+    xbytes = _shard_xbytes()
+    rows, rps = [], {}
+    for path in ("scan", "mesh"):
+        srv = _mlp_server(scenario, clients=clients)
+        if path == "mesh":
+            shard_fleet(srv, mesh)
+        eng = ScanEngine(srv, chunk_rounds=SHARD_ROUNDS)
+        t0 = time.perf_counter()
+        warm = eng.run(SHARD_ROUNDS + 1)
+        compile_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        eng.run(SHARD_ROUNDS)
+        us = (time.perf_counter() - t0) / SHARD_ROUNDS * 1e6
+        rps[path] = 1e6 / us
+        derived = (f"rounds_per_sec={rps[path]:.2f};"
+                   f"edges={SHARD_EDGES};"
+                   f"mesh_devices={mesh.devices.size if path == 'mesh' else 1};"
+                   f"cross_shard_bytes={xbytes:.0f};"
+                   f"compile_s={compile_s:.2f};"
+                   f"loss_round{SHARD_ROUNDS + 1}={warm[-1]['loss']:.4f}")
+        if path == "mesh":
+            derived += (f";scaling_efficiency="
+                        f"{rps['mesh'] / rps['scan']:.2f}")
+        rows.append((f"fl/shard_{path}_{SHARD_N}", us, derived))
+    return rows
+
+
+def _shard_xbytes() -> float:
+    """The shard tier's analytic edge→hub bytes per round — host-only
+    shape arithmetic on the fleet's distinct plans."""
+    from repro.core.topology import cross_shard_bytes
+    plans = []
+    for t in SCALE_TIERS:
+        if DEVICE_TIERS[t] not in plans:
+            plans.append(DEVICE_TIERS[t])
+    return cross_shard_bytes(mlp.init(KEY, mlp_config()), plans,
+                             SHARD_EDGES)
+
+
 ASYNC_N = 256
 ASYNC_ROUNDS = 50
 ASYNC_BUFFER = 64
@@ -406,6 +485,7 @@ def run() -> list[tuple]:
     rows += _async_scan_rows()
     rows += _submodel_rows()
     rows += _submodel_pallas_rows()
+    rows += _shard_rows()
 
     gcfg = get_smoke_config("granite-3-2b")
     gmodel = get_model(gcfg)
@@ -466,15 +546,17 @@ def emit_json(path: str) -> dict:
     fl/engine_* rows (the ISSUE-4 acceptance numbers), from PR 5 the
     fl/submodel_* rows (masked vs width-sliced cohort step), from PR 6
     the fl/async_scan_* rows (window-scan async engine vs eager
-    windows), and from PR 7 the fl/submodel_pallas_* rows (fused
+    windows), from PR 7 the fl/submodel_pallas_* rows (fused
     prefix-block aggregation vs sequential scatter on the structured
-    fleet), plus commit provenance (HEAD sha + dirty flag), written to
-    ``path``. Runs ONLY those sections — cheap enough for every CI run;
-    ``make bench-fl`` is the local entry point."""
+    fleet), and from PR 8 the fl/shard_* rows (100k-client sharded
+    hierarchical fleet, DESIGN.md §16), plus commit provenance (HEAD
+    sha + dirty flag), written to ``path``. Runs ONLY those sections —
+    cheap enough for every CI run; ``make bench-fl`` is the local entry
+    point."""
     import json
     import platform
     rows = (_engine_rows() + _async_scan_rows() + _submodel_rows()
-            + _submodel_pallas_rows())
+            + _submodel_pallas_rows() + _shard_rows())
     by_name = {name: {"us_per_call": us, "derived": derived}
                for name, us, derived in rows}
 
@@ -492,6 +574,9 @@ def emit_json(path: str) -> dict:
         return 1e6 / by_name[
             f"fl/submodel_pallas_{name}_{ENGINE_N}"]["us_per_call"]
 
+    def _shrps(name):
+        return 1e6 / by_name[f"fl/shard_{name}_{SHARD_N}"]["us_per_call"]
+
     commit, dirty = _commit_hash()
     record = {
         "kind": "fl_bench",
@@ -502,17 +587,24 @@ def emit_json(path: str) -> dict:
         "config": {"clients": ENGINE_N, "plans": len(SCALE_TIERS),
                    "rounds": ENGINE_ROUNDS,
                    "async_buffer": ASYNC_BUFFER,
-                   "async_windows": ASYNC_SCAN_WINDOWS},
+                   "async_windows": ASYNC_SCAN_WINDOWS,
+                   "shard_clients": SHARD_N, "shard_edges": SHARD_EDGES,
+                   "shard_devices": len(jax.devices()),
+                   "shard_rounds": SHARD_ROUNDS},
         "rounds_per_sec": {"eager": _rps("eager"), "scan": _rps("scan"),
                            "pallas": _rps("pallas")},
         "rounds_per_sec_structured": {"scan": _srps("scan"),
                                       "fused": _srps("fused")},
+        "rounds_per_sec_sharded": {"scan": _shrps("scan"),
+                                   "mesh": _shrps("mesh")},
         "windows_per_sec": {"eager": _wps("eager"),
                             "scan": _wps("engine")},
         "speedup_scan_vs_eager": _rps("scan") / _rps("eager"),
         "speedup_async_scan_vs_eager": _wps("engine") / _wps("eager"),
         "speedup_width_vs_masked_step": _sub_us("masked") / _sub_us("width"),
         "speedup_structured_fused_vs_scan": _srps("fused") / _srps("scan"),
+        "scaling_efficiency": _shrps("mesh") / _shrps("scan"),
+        "cross_shard_bytes": _shard_xbytes(),
         "rows": by_name,
     }
     with open(path, "w") as f:
@@ -534,7 +626,11 @@ if __name__ == "__main__":
               f"structured fused "
               f"{rec['rounds_per_sec_structured']['fused']:.1f} rounds/s, "
               f"{rec['speedup_structured_fused_vs_scan']:.2f}x vs scan "
-              f"@ {rec['config']['clients']} clients")
+              f"@ {rec['config']['clients']} clients; "
+              f"sharded {rec['rounds_per_sec_sharded']['mesh']:.2f} rounds/s "
+              f"@ {rec['config']['shard_clients']} clients / "
+              f"{rec['config']['shard_edges']} edges, "
+              f"eff {rec['scaling_efficiency']:.2f}")
     else:
         for name, us, derived in run():
             print(f"{name},{us:.1f},{derived}")

@@ -94,9 +94,11 @@ import numpy as np
 from repro.core.aggregation import (accumulate_cohort, finalize,
                                     scatter_accumulate, zeros_like_acc)
 from repro.core.federated import (AsyncFLServer, CohortFLServer, _apply_fns,
-                                  _init_cohort_ef, _local_param_struct,
-                                  cohort_step_fn, window_groups)
+                                  _init_cohort_ef, _init_edge_ef,
+                                  _local_param_struct, cohort_step_fn,
+                                  window_groups)
 from repro.core.schedule import materialize_windows
+from repro.core.topology import EdgeCohort, scatter_part
 
 AGG_BACKENDS = ("sequential", "pallas")
 
@@ -144,11 +146,28 @@ class ScanEngine:
         if self.chunk_rounds < 0:
             raise ValueError("chunk_rounds must be >= 0 (0 = one chunk per run)")
         srv = self.server
+        # hierarchical fleets (DESIGN.md §16): every cohort is an edge
+        # grid — the step is the cohort step vmapped over the edge axis
+        # (the same program the eager reference dispatches), batches are
+        # (E, cap, n, ...), and the combine chains plans x edges in
+        # fixed order. The fused pallas backends have no edge axis, so
+        # topology runs keep the sequential (bitwise) aggregation.
+        self._topology = (len(srv.cohorts) > 0
+                          and isinstance(srv.cohorts[0], EdgeCohort))
+        if self._topology and self.agg != "sequential":
+            raise ValueError(
+                "topology fleets aggregate per (plan, edge) partial — "
+                "the fused pallas backends have no edge axis; use "
+                "agg='sequential'")
         self._steps = [cohort_step_fn(srv.model.loss_fn, c.plan, srv.mode,
                                       srv.local_steps, srv.local_lr,
                                       srv.upload_quant)
                        for c in srv.cohorts]
-        self._n_batch = [next(iter(c.data.values())).shape[1]
+        if self._topology:
+            self._steps = [jax.vmap(s, in_axes=(None, 0, 0, 0))
+                           for s in self._steps]
+        self._n_batch = [next(iter(c.data.values()))
+                         .shape[2 if self._topology else 1]
                          for c in srv.cohorts]
         # structured (width-sliced) cohorts, DESIGN.md §13: per-cohort
         # slice specs (None = masked plan) drive the in-body scatter, and
@@ -198,6 +217,17 @@ class ScanEngine:
         exactly like the eager round's ``scatter_accumulate`` call."""
         acc = zeros_like_acc(params, dense_den=self._any_structured)
         for ci, (g_sum, masks, weight, count) in enumerate(per_cohort):
+            if self._topology:
+                # hub combine (DESIGN.md §16): chain the per-edge partial
+                # accumulators in fixed edge order — the same chain the
+                # eager grid branch runs, so the result is bitwise equal
+                # by construction; empty edges add exact zeros
+                for e in range(self.server.cohorts[ci].n_edges):
+                    acc = scatter_accumulate(
+                        acc, jax.tree.map(lambda t: t[e], g_sum),
+                        jax.tree.map(lambda t: t[e], masks),
+                        self._specs[ci], jnp.float32(weight), count[e])
+                continue
             acc = scatter_accumulate(acc, g_sum, masks, self._specs[ci],
                                      jnp.float32(weight), count)
         return finalize(acc)
@@ -302,13 +332,29 @@ class ScanEngine:
                 # the eager path re-zeros the residuals every dispatch
                 # when feedback is off; recreate them in-program (at the
                 # cohort's LOCAL shapes — sub-sized for structured plans)
-                ef = _init_cohort_ef(srv.cohorts[ci].size,
-                                     self._local_structs[ci])
+                c = srv.cohorts[ci]
+                ef = (_init_edge_ef(c.n_edges, c.cap,
+                                    self._local_structs[ci])
+                      if self._topology
+                      else _init_cohort_ef(c.size, self._local_structs[ci]))
             g_sum, masks, l_sum, new_ef = jax.lax.optimization_barrier(
                 step(params, datas[ci], part, ef))
+            new_efs.append(new_ef if srv.error_feedback else efs[ci])
+            if self._topology:
+                # topology round: part is the (E, cap) grid, l_sum is the
+                # (E,) per-edge stack. The loss chain replays the eager
+                # grid branch's per-edge adds in edge order; empty edges
+                # add exact zeros (bitwise identity). Wall/bytes/counts
+                # are computed HOST-side from the flat masks (float64,
+                # exactly the eager expressions) in _run_chunk.
+                per_cohort.append((g_sum, masks,
+                                   srv.cohorts[ci].plan.weight,
+                                   x["count"][ci]))
+                for e in range(srv.cohorts[ci].n_edges):
+                    loss_sum = loss_sum + l_sum[e]
+                continue
             per_cohort.append((g_sum, masks, srv.cohorts[ci].plan.weight,
                                jnp.sum(part)))
-            new_efs.append(new_ef if srv.error_feedback else efs[ci])
             loss_sum = loss_sum + l_sum
             wall = jnp.maximum(wall, jnp.max(
                 jnp.where(part > 0, self._T_dev[ci], -np.inf)))
@@ -328,8 +374,9 @@ class ScanEngine:
                               params, new_params)
         opt_state = jax.tree.map(lambda o, n: jnp.where(has, n, o),
                                  opt_state, new_opt)
-        metrics = {"loss_sum": loss_sum, "wall": wall,
-                   "upload_bytes": up_bytes, "n_participants": n_part}
+        metrics = ({"loss_sum": loss_sum} if self._topology
+                   else {"loss_sum": loss_sum, "wall": wall,
+                         "upload_bytes": up_bytes, "n_participants": n_part})
         return (params, opt_state, tuple(new_efs)), metrics
 
     def _chunk_fn(self, carry, xs, datas):
@@ -367,14 +414,38 @@ class ScanEngine:
         step0 = srv.step
         parts, dropped = self._host_masks(R, participation)
         xs = {
-            "part": tuple(
-                jnp.asarray(np.stack([parts[r][ci] for r in range(R)]),
-                            jnp.float32)
-                for ci in range(len(srv.cohorts))),
             "step": jnp.asarray(np.arange(step0, step0 + R), jnp.int32),
             "has": jnp.asarray([any(p.any() for p in parts[r])
                                 for r in range(R)]),
         }
+        if self._topology:
+            # grid xs (DESIGN.md §16): the flat sampled masks scattered
+            # into each cohort's (E, cap) grid plus per-edge participant
+            # counts (exact small ints). Under a mesh the stacked grids
+            # are placed shard-aligned with the cohort data: rounds
+            # replicated, edges split on the "data" axis.
+            xs["part"] = tuple(
+                jnp.asarray(np.stack([scatter_part(c, parts[r][ci])
+                                      for r in range(R)]))
+                for ci, c in enumerate(srv.cohorts))
+            xs["count"] = tuple(
+                jnp.asarray(np.stack(
+                    [np.bincount(c.edge_index[parts[r][ci]],
+                                 minlength=c.n_edges)
+                     for r in range(R)]), jnp.float32)
+                for ci, c in enumerate(srv.cohorts))
+            if srv.mesh is not None:
+                sh = jax.sharding.NamedSharding(
+                    srv.mesh, jax.sharding.PartitionSpec(None, "data"))
+                xs["part"] = tuple(jax.device_put(p, sh)
+                                   for p in xs["part"])
+                xs["count"] = tuple(jax.device_put(c, sh)
+                                    for c in xs["count"])
+        else:
+            xs["part"] = tuple(
+                jnp.asarray(np.stack([parts[r][ci] for r in range(R)]),
+                            jnp.float32)
+                for ci in range(len(srv.cohorts)))
         carry = (srv.params, srv.opt_state, self._ef_carry())
         if not self._owns(carry):
             # the carry is donated: never eat buffers the caller may still
@@ -393,7 +464,23 @@ class ScanEngine:
         m = jax.device_get(metrics)
         recs = []
         for r in range(R):
-            n_p = int(m["n_participants"][r])
+            if self._topology:
+                # Eq. (1) record fields host-side, float64 — verbatim the
+                # eager round's expressions over the same flat masks, so
+                # topology records match the eager path EXACTLY (the flat
+                # engine's in-program f32 wall/bytes are approximate)
+                n_p, wall, up = 0, 0.0, 0.0
+                for ci, p in enumerate(parts[r]):
+                    if p.any():
+                        n_p += int(p.sum())
+                        wall = max(wall,
+                                   float(self._times[ci]["T"][p].max()))
+                        up += float(
+                            self._times[ci]["payload_bytes"][p].sum())
+            else:
+                n_p = int(m["n_participants"][r])
+                wall = float(m["wall"][r]) if n_p else 0.0
+                up = float(m["upload_bytes"][r])
             rec = {
                 "step": step0 + r + 1,
                 "loss": (float(m["loss_sum"][r]) / n_p if n_p
@@ -402,8 +489,8 @@ class ScanEngine:
                 "n_dropped": dropped[r],
                 "round_wall_time": (
                     srv.deadline if srv.straggler == "drop" and dropped[r]
-                    else float(m["wall"][r]) if n_p else 0.0),
-                "total_upload_bytes": float(m["upload_bytes"][r]),
+                    else wall),
+                "total_upload_bytes": up,
             }
             srv.history.append(rec)
             recs.append(rec)
@@ -432,6 +519,18 @@ class ScanEngine:
         srv = self.server
         if srv.upload_quant is None or not srv.error_feedback:
             return tuple(() for _ in srv.cohorts)
+        if self._topology:
+            from repro.core.topology import edge_sharding
+            out = []
+            for ci, c in enumerate(srv.cohorts):
+                ef = c.ef_buffer
+                if ef is None:
+                    ef = _init_edge_ef(c.n_edges, c.cap,
+                                       self._local_structs[ci])
+                    if srv.mesh is not None:
+                        ef = jax.device_put(ef, edge_sharding(srv.mesh))
+                out.append(ef)
+            return tuple(out)
         return tuple(c.ef_buffer if c.ef_buffer is not None
                      else _init_cohort_ef(c.size, self._local_structs[ci])
                      for ci, c in enumerate(srv.cohorts))

@@ -60,6 +60,8 @@ from repro.core.compression.quantization import fake_quant_ste
 from repro.core.heterogeneity import (PROFILES, cohort_round_time,
                                       round_time)
 from repro.core.schedule import VirtualClockScheduler
+from repro.core.topology import (EdgeCohort, build_edge_cohorts,
+                                 scatter_part)
 from repro.data.federated import stack_shards
 from repro.numerics import FORMATS
 
@@ -239,10 +241,14 @@ class Cohort:
         return len(self.client_ids)
 
 
-def build_cohorts(clients: list[Client]) -> list[Cohort]:
+def build_cohorts(clients: list[Client], topology=None) -> list:
     """Group clients by plan (plans are frozen/hashable) and stack their
     shards. Cohort order follows first appearance; within a cohort, client
-    order is preserved."""
+    order is preserved. With a :class:`~repro.core.topology.FleetTopology`
+    the same grouping is arranged as edge grids instead
+    (:func:`~repro.core.topology.build_edge_cohorts`, DESIGN.md §16)."""
+    if topology is not None:
+        return build_edge_cohorts(clients, topology)
     groups: dict[CompressionPlan, list[Client]] = {}
     for c in clients:
         groups.setdefault(c.plan, []).append(c)
@@ -261,6 +267,16 @@ def _init_cohort_ef(size: int, params):
     shapes/dtypes are read."""
     return jax.tree.map(
         lambda p: jnp.zeros((size,) + tuple(p.shape), p.dtype), params)
+
+
+def _init_edge_ef(n_edges: int, cap: int, params):
+    """The edge-grid twin of :func:`_init_cohort_ef`: one residual row
+    per ``(edge, grid row)`` cell — padding cells carry zeros forever
+    (their participation never flips, so ``_upload_and_sum`` never
+    writes them)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_edges, cap) + tuple(p.shape), p.dtype),
+        params)
 
 
 def _local_param_struct(params, plan: CompressionPlan):
@@ -456,6 +472,55 @@ def _cohort_upload(server, cohort: Cohort, batches, part, params):
     return g_sum, masks, l_sum
 
 
+@functools.lru_cache(maxsize=64)
+def _edge_step_jit(loss_fn: Callable, plan: CompressionPlan, mode: str,
+                   local_steps: int, local_lr: float,
+                   upload_fmt: str | None):
+    """Jitted-and-cached EDGE step (DESIGN.md §16): the one-cohort
+    :func:`cohort_step_fn` vmapped over a leading edge axis —
+    ``(params, (E,cap,n,...) batches, (E,cap) part, (E,cap,...) ef) ->
+    ((E,...) update_sums, (E,...) masks, (E,) loss_sums, ef)``. One
+    program computes every edge gateway's partial aggregate; under
+    ``shard_fleet`` GSPMD places each edge's rows on its own device.
+    NOTE: the vmapped body is NOT bitwise-interchangeable with an
+    un-vmapped :func:`cohort_step_fn` call for the fedsgd
+    grad-of-weighted-sum branch (vmap changes the backward's
+    contraction structure), which is why the unsharded reference for a
+    topology fleet runs this same program — sharding is data placement
+    only."""
+    return jax.jit(jax.vmap(
+        cohort_step_fn(loss_fn, plan, mode, local_steps, local_lr,
+                       upload_fmt), in_axes=(None, 0, 0, 0)))
+
+
+def _edge_cohort_upload(server, cohort: EdgeCohort, batches, part_flat,
+                        params):
+    """One edge cohort's participation-masked upload: scatter the flat
+    sampled mask into the ``(E, cap)`` grid, dispatch the vmapped edge
+    step, manage the grid-shaped EF buffer. Returns per-edge stacks
+    ``(update_sums, masks, loss_sums)`` for the hub's fixed-order
+    combine."""
+    ef = cohort.ef_buffer
+    if server.upload_quant is not None and ef is None:
+        ef = _init_edge_ef(cohort.n_edges, cohort.cap,
+                           _local_param_struct(params, cohort.plan))
+        if getattr(server, "mesh", None) is not None:
+            from repro.core.topology import edge_sharding
+            ef = jax.device_put(ef, edge_sharding(server.mesh))
+    elif server.upload_quant is None:
+        ef = ()                     # leafless placeholder pytree
+    fn = _edge_step_jit(server.model.loss_fn, cohort.plan, server.mode,
+                        server.local_steps, server.local_lr,
+                        server.upload_quant)
+    g_sums, masks, l_sums, new_ef = fn(params, batches,
+                                       jnp.asarray(
+                                           scatter_part(cohort, part_flat)),
+                                       ef)
+    if server.upload_quant is not None and server.error_feedback:
+        cohort.ef_buffer = new_ef
+    return g_sums, masks, l_sums
+
+
 @dataclass
 class CohortFLServer:
     """Cohort-vectorized federated runtime (DESIGN.md §9).
@@ -491,6 +556,11 @@ class CohortFLServer:
     deadline: float | None = None   # seconds, required for straggler="drop"
     seed: int = 0
     step: int = 0
+    # hierarchical fleets (DESIGN.md §16): the FleetTopology the cohorts
+    # were gridded against (None = flat fleet), and the device mesh
+    # topology.shard_fleet placed the edge grids on (None = unsharded)
+    topology: Any = None
+    mesh: Any = field(default=None, init=False, repr=False)
     history: list = field(default_factory=list)
     # per-(cohort, n_batch) Eq. (1) memo: the fleet, plans and param
     # SHAPES are static per server, so times never change across rounds
@@ -513,8 +583,10 @@ class CohortFLServer:
             raise ValueError("straggler='drop' requires a deadline (seconds)")
 
     @classmethod
-    def from_clients(cls, clients: list[Client], **kw) -> "CohortFLServer":
-        return cls(cohorts=build_cohorts(clients), **kw)
+    def from_clients(cls, clients: list[Client], topology=None,
+                     **kw) -> "CohortFLServer":
+        return cls(cohorts=build_cohorts(clients, topology),
+                   topology=topology, **kw)
 
     @property
     def n_clients(self) -> int:
@@ -583,7 +655,8 @@ class CohortFLServer:
         for ci, (cohort, part) in enumerate(zip(self.cohorts, sampled)):
             batches = (cohort.data if cohort_batches is None
                        else cohort_batches[ci])
-            n_batch = next(iter(batches.values())).shape[1]
+            grid = isinstance(cohort, EdgeCohort)
+            n_batch = next(iter(batches.values())).shape[2 if grid else 1]
             times = self.cohort_times(ci, n_batch)
             part = part.copy()
             if self.straggler == "drop":
@@ -596,6 +669,25 @@ class CohortFLServer:
             wall = max(wall, float(times["T"][part].max()))
             upload_bytes += float(times["payload_bytes"][part].sum())
             n_part_total += n_p
+
+            if grid:
+                # hierarchical path (DESIGN.md §16): one vmapped edge
+                # step, then the hub's fixed edge-order combine — each
+                # edge forwards its partial (update_sum, masks, loss)
+                # and the chain below is the ONLY cross-edge arithmetic
+                g_sums, masks, l_sums = _edge_cohort_upload(
+                    self, cohort, batches, part, self.params)
+                counts = np.bincount(cohort.edge_index[part],
+                                     minlength=cohort.n_edges)
+                spec = self.cohort_spec(ci)
+                w = jnp.float32(cohort.plan.weight)
+                for e in range(cohort.n_edges):
+                    acc = scatter_accumulate(
+                        acc, jax.tree.map(lambda t: t[e], g_sums),
+                        jax.tree.map(lambda t: t[e], masks), spec, w,
+                        jnp.float32(counts[e]))
+                    loss_sum = loss_sum + l_sums[e]
+                continue
 
             g_sum, masks, l_sum = _cohort_upload(self, cohort, batches,
                                                  part, self.params)

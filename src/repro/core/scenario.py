@@ -35,8 +35,9 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Any, ClassVar
 
-from repro.core.compression import DEVICE_TIERS
+from repro.core.compression import DEVICE_TIERS, active_param_count
 from repro.core.heterogeneity import PROFILES, round_time
+from repro.core.topology import FleetTopology, cross_shard_bytes
 from repro.numerics import FORMATS
 
 __all__ = [
@@ -70,6 +71,12 @@ class FleetSpec:
     ``"iid"`` or label-skew ``"dirichlet"`` — deterministic in
     ``data_seed``, so two builds of the same spec see bit-identical
     shards.
+
+    ``topology`` (optional) arranges the fleet hierarchically
+    (DESIGN.md §16): a :class:`~repro.core.topology.FleetTopology`
+    partitioning the client ids into edge groups, each reporting one
+    partial aggregate to the hub per round. A plain ``{"edges": ...}``
+    dict (the JSON form) is accepted and coerced.
     """
     tiers: tuple[str, ...]
     profiles: tuple[str, ...] | None = None
@@ -77,11 +84,17 @@ class FleetSpec:
     partition: str = "iid"          # iid | dirichlet
     alpha: float = 0.5              # dirichlet concentration
     data_seed: int = 0
+    topology: FleetTopology | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "tiers", tuple(self.tiers))
         if self.profiles is not None:
             object.__setattr__(self, "profiles", tuple(self.profiles))
+        if isinstance(self.topology, dict):
+            object.__setattr__(self, "topology",
+                               FleetTopology.from_dict(self.topology))
+        if self.topology is not None:
+            self.topology.validate(len(self.tiers))
         if not self.tiers:
             raise ValueError("FleetSpec needs at least one client tier")
         for t in self.tiers:
@@ -97,14 +110,20 @@ class FleetSpec:
 
     @classmethod
     def cycling(cls, tiers, n_clients: int, *, profiles=None,
-                samples_per_client: int = 16, **kw) -> "FleetSpec":
+                samples_per_client: int = 16, edges: int | None = None,
+                **kw) -> "FleetSpec":
         """The benchmark fleets' shape: ``n_clients`` cycling over a short
-        tier (and optionally profile) pattern, equal IID-able shards."""
+        tier (and optionally profile) pattern, equal IID-able shards.
+        ``edges=E`` attaches a contiguous E-group
+        :class:`~repro.core.topology.FleetTopology`."""
         t = tuple(tiers[i % len(tiers)] for i in range(n_clients))
         p = (None if profiles is None else
              tuple(profiles[i % len(profiles)] for i in range(n_clients)))
+        topo = (None if edges is None
+                else FleetTopology.contiguous(n_clients, edges))
         return cls(tiers=t, profiles=p,
-                   n_samples=n_clients * samples_per_client, **kw)
+                   n_samples=n_clients * samples_per_client,
+                   topology=topo, **kw)
 
     @property
     def n_clients(self) -> int:
@@ -154,7 +173,10 @@ class FleetSpec:
                                                self.client_profiles))]
 
     def to_dict(self) -> dict:
-        return _fields_dict(self)
+        d = _fields_dict(self)
+        if self.topology is not None:
+            d["topology"] = self.topology.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "FleetSpec":
@@ -162,7 +184,7 @@ class FleetSpec:
         d["tiers"] = tuple(d["tiers"])
         if d.get("profiles") is not None:
             d["profiles"] = tuple(d["profiles"])
-        return cls(**d)
+        return cls(**d)           # a topology dict is coerced in post_init
 
 
 # ------------------------------------------------------------- policies
@@ -335,6 +357,15 @@ class FLScenario:
             raise ValueError("AsyncBuffered schedules every client on the "
                              "virtual clock; partial participation is a "
                              "sync-only knob")
+        if self.fleet.topology is not None:
+            if self.runtime == "client":
+                raise ValueError("hierarchical topologies ride the cohort "
+                                 "runtime's edge grids; the per-client "
+                                 "loop has no edge axis")
+            if isinstance(self.timing, AsyncBuffered):
+                raise ValueError("AsyncBuffered aggregates per buffered "
+                                 "window, not per edge; topology fleets "
+                                 "are sync-only (DESIGN.md §16)")
 
     def to_dict(self) -> dict:
         return {"fleet": self.fleet.to_dict(),
@@ -462,12 +493,14 @@ def build_server(scenario: FLScenario, model, optimizer, params, *,
             seed=scenario.participation.seed, **common)
     if isinstance(timing, SyncDrop):
         return CohortFLServer.from_clients(
-            clients, straggler="drop", deadline=timing.deadline,
+            clients, topology=scenario.fleet.topology,
+            straggler="drop", deadline=timing.deadline,
             sample_fraction=scenario.participation.fraction,
             seed=scenario.participation.seed, **common)
     if isinstance(timing, SyncWait):
         return CohortFLServer.from_clients(
-            clients, straggler="wait",
+            clients, topology=scenario.fleet.topology,
+            straggler="wait",
             sample_fraction=scenario.participation.fraction,
             seed=scenario.participation.seed, **common)
     raise TypeError(f"unknown timing policy {type(timing).__name__}")
@@ -499,7 +532,8 @@ ENGINES = ("eager", "scan", "scan_pallas")
 def simulate(scenario: FLScenario, rounds: int, *, model=None,
              optimizer=None, params=None, clients: list | None = None,
              shards: list | None = None, init_seed: int = 0,
-             engine: str = "eager", chunk_rounds: int | None = None) -> RunResult:
+             engine: str = "eager", chunk_rounds: int | None = None,
+             mesh=None) -> RunResult:
     """The unified driver: build the scenario's runtime and advance it
     ``rounds`` federated rounds (sync) or aggregation windows (async).
     With no model/optimizer/params it runs the paper's MLP task.
@@ -527,6 +561,13 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
     The per-client loop (``runtime="client"``) falls back to eager
     regardless of ``engine``. The backend actually used is reported as
     ``result.agg_backend``.
+
+    ``mesh`` (topology fleets only, DESIGN.md §16): shard the fleet's
+    edge grids over a device mesh via
+    :func:`~repro.core.topology.shard_fleet` before running — placement
+    only, the trajectory stays bitwise identical to the unsharded run.
+    Pass ``mesh=True`` for the default :func:`make_edge_mesh` over the
+    available devices, or an explicit ``jax.sharding.Mesh``.
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
@@ -536,6 +577,9 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
                                                init_seed)
     srv = build_server(scenario, model, optimizer, params,
                        clients=clients, shards=shards)
+    if mesh is not None and mesh is not False:
+        from repro.core.topology import shard_fleet
+        shard_fleet(srv, None if mesh is True else mesh)
     agg_backend = "sequential"
     if engine != "eager" and scenario.runtime == "cohort":
         if isinstance(scenario.timing, AsyncBuffered):
@@ -593,7 +637,11 @@ def scenario_census(scenario: FLScenario, params=None) -> dict:
     sizes = spec.shard_sizes()
     per_group: dict[tuple[str, str], dict] = {}
     per_client_T: list[float] = []
+    per_client_bytes: list[float] = []
+    per_client_active: list[float] = []
+    client_plans: list = []
     total_bytes = 0.0
+    active_memo: dict = {}
     for i, (tier, prof) in enumerate(zip(spec.tiers, spec.client_profiles)):
         plan = DEVICE_TIERS[tier]
         if scenario.local.submodel == "width":
@@ -601,6 +649,11 @@ def scenario_census(scenario: FLScenario, params=None) -> dict:
         t = round_time(params, plan, PROFILES[prof], sizes[i],
                        local_steps)
         per_client_T.append(t["T"])
+        per_client_bytes.append(t["payload_bytes"])
+        if plan not in active_memo:
+            active_memo[plan] = float(active_param_count(params, plan))
+        per_client_active.append(active_memo[plan])
+        client_plans.append(plan)
         total_bytes += t["payload_bytes"]
         g = per_group.setdefault((tier, prof), {"count": 0, "n_shard": 0})
         g["count"] += 1
@@ -620,6 +673,26 @@ def scenario_census(scenario: FLScenario, params=None) -> dict:
            # expectation under uniform without-replacement sampling
            "total_upload_bytes_per_round": total_bytes * n_sel / spec.n_clients,
            "tiers": rows}
+    if spec.topology is not None:
+        # hierarchical traffic picture (DESIGN.md §16): per edge group,
+        # who reports there, the largest sub-model an edge must hold,
+        # the group's Eq. (1) critical path, and its device->edge uplink
+        # — plus the analytic edge->hub traffic, which depends on plans
+        # and edge count but never on client count
+        topo = spec.topology
+        distinct = []
+        for plan in client_plans:
+            if plan not in distinct:
+                distinct.append(plan)
+        out["n_edges"] = topo.n_edges
+        out["cross_shard_bytes_per_round"] = cross_shard_bytes(
+            params, distinct, topo.n_edges)
+        out["edge_groups"] = [
+            {"edge": e, "clients": len(ids),
+             "active_params_max": max(per_client_active[c] for c in ids),
+             "round_wall_time": max(per_client_T[c] for c in ids),
+             "uplink_bytes": sum(per_client_bytes[c] for c in ids)}
+            for e, ids in enumerate(topo.edges)]
     timing = scenario.timing
     if isinstance(timing, AsyncBuffered):
         out["buffer_size"] = timing.buffer_size

@@ -1,0 +1,308 @@
+"""Fleet topology (DESIGN.md §16): hierarchical device→edge→hub
+aggregation over a device mesh.
+
+Production IoT deployments do not upload every client's gradient to one
+cloud server: devices report to EDGE gateways, and edges forward ONE
+partial aggregate each to the hub — cross-link traffic is O(params) per
+edge per round, independent of how many devices hang off each gateway
+(Imteaj et al., surveys of FL for constrained IoT). This module is that
+hierarchy for the cohort runtime:
+
+- :class:`FleetTopology` — the static spec: a partition of client ids
+  into ordered edge groups. Frozen, hashable, JSON-round-tripping, so a
+  scenario carrying one stays a scenario (``FleetSpec(topology=...)``).
+- :class:`EdgeCohort` / :func:`build_edge_cohorts` — the runtime shape:
+  per plan, each edge's sub-cohort is one ROW of a padded
+  ``(E, cap, n, ...)`` grid (padding rows carry permanent participation
+  0, contributing exact zeros), and one ``jax.vmap`` of the cohort step
+  over the edge axis replaces E separate dispatches.
+- :func:`shard_fleet` — placement is DATA, not code: put the edge axis
+  of every grid (batches, participation, EF buffers) on the mesh's
+  ``"data"`` axis via ``NamedSharding`` and replicate params; the same
+  jitted program then runs GSPMD-partitioned with each edge's training
+  resident on its own device. No separate "distributed path" exists to
+  diverge from the reference.
+- :func:`cross_shard_bytes` — the analytic edge→hub traffic model the
+  census reports: per round each (plan, edge) forwards one sub-shaped
+  update tree + mask tree + loss scalar, so bytes depend on plans and
+  E, never on client count.
+
+Bit-identity contract: the per-round combine is a SEQUENTIAL chain over
+plans in first-appearance order and edges in index order — the fixed
+edge-order tree — through the same ``scatter_accumulate`` the flat
+runtime uses. Sharded vs single-device execution of the identical
+program is bitwise (pinned in tests/test_topology.py); note the vmapped
+edge step is NOT bitwise with the flat (un-vmapped) cohort step for the
+fedsgd grad-of-weighted-sum branch, so a topology fleet is its own
+numerical reference, compared sharded-vs-unsharded, not vs the flat
+fleet.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "FleetTopology", "EdgeCohort", "build_edge_cohorts", "scatter_part",
+    "make_edge_mesh", "edge_sharding", "replicated_sharding",
+    "shard_fleet", "cross_shard_bytes",
+]
+
+
+@dataclass(frozen=True)
+class FleetTopology:
+    """A static partition of client ids into ordered edge groups.
+
+    ``edges[e]`` is the tuple of client ids reporting to edge gateway
+    ``e``; the hub is implicit (there is exactly one). Ids must be
+    unique across edges and every edge must be non-empty; binding a
+    topology to a fleet additionally requires the ids to cover exactly
+    ``range(n_clients)`` (:meth:`validate`). Frozen and hashable — a
+    topology is part of a scenario's identity — and JSON-safe via
+    ``to_dict``/``from_dict``.
+    """
+    edges: tuple[tuple[int, ...], ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "edges",
+                           tuple(tuple(int(c) for c in e)
+                                 for e in self.edges))
+        if not self.edges:
+            raise ValueError("FleetTopology needs at least one edge group")
+        seen: set[int] = set()
+        for e, ids in enumerate(self.edges):
+            if not ids:
+                raise ValueError(f"edge group {e} is empty")
+            for c in ids:
+                if c < 0:
+                    raise ValueError(f"negative client id {c} in edge {e}")
+                if c in seen:
+                    raise ValueError(f"client {c} appears in two edge groups")
+                seen.add(c)
+
+    @classmethod
+    def contiguous(cls, n_clients: int, n_edges: int) -> "FleetTopology":
+        """Split ``range(n_clients)`` into ``n_edges`` contiguous groups
+        (``np.array_split`` sizes: remainders go to the first groups)."""
+        if not 1 <= n_edges <= n_clients:
+            raise ValueError(f"need 1 <= n_edges <= n_clients, got "
+                             f"{n_edges} edges for {n_clients} clients")
+        return cls(tuple(tuple(int(c) for c in part) for part in
+                         np.array_split(np.arange(n_clients), n_edges)))
+
+    @classmethod
+    def round_robin(cls, n_clients: int, n_edges: int) -> "FleetTopology":
+        """Deal ``range(n_clients)`` over ``n_edges`` groups round-robin —
+        with a cycling tier pattern this spreads every plan across every
+        edge (the balanced load case)."""
+        if not 1 <= n_edges <= n_clients:
+            raise ValueError(f"need 1 <= n_edges <= n_clients, got "
+                             f"{n_edges} edges for {n_clients} clients")
+        return cls(tuple(tuple(range(e, n_clients, n_edges))
+                         for e in range(n_edges)))
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    @property
+    def n_clients(self) -> int:
+        return sum(len(e) for e in self.edges)
+
+    def edge_of(self) -> dict[int, int]:
+        """client id -> edge index."""
+        return {c: e for e, ids in enumerate(self.edges) for c in ids}
+
+    def validate(self, n_clients: int) -> None:
+        """The bind-time check: the edge groups must partition exactly
+        ``range(n_clients)``."""
+        ids = sorted(c for e in self.edges for c in e)
+        if ids != list(range(n_clients)):
+            raise ValueError(
+                f"topology covers {len(ids)} client ids "
+                f"(max {ids[-1] if ids else '-'}) but the fleet has "
+                f"{n_clients} clients 0..{n_clients - 1}")
+
+    def to_dict(self) -> dict:
+        return {"edges": [list(e) for e in self.edges]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FleetTopology":
+        return cls(tuple(tuple(e) for e in d["edges"]))
+
+
+# ----------------------------------------------------------- edge grids
+
+def _cohort_cls():
+    # deferred: federated imports this module's names lazily too
+    from repro.core.federated import Cohort
+    return Cohort
+
+
+@dataclass
+class EdgeCohort:
+    """One plan's clients arranged as an ``(E, cap, ...)`` edge grid.
+
+    Duck-types :class:`~repro.core.federated.Cohort` (``plan``,
+    ``client_ids``, ``data``, ``profile_names``, ``ef_buffer``,
+    ``size``), with two shape changes: ``data`` leaves carry a leading
+    EDGE axis — ``(E, cap, n, ...)`` where ``cap`` is the largest
+    per-edge sub-cohort, short edges padded with zero rows — and
+    ``ef_buffer`` (when quantized uploads carry error feedback) is
+    stacked ``(E, cap, *local_shape)``.
+
+    Flat-order metadata is preserved: ``client_ids``/``profile_names``
+    keep the plan group's original order, so participation sampling and
+    the host-side Eq. (1) deadline/wall/bytes arithmetic are IDENTICAL
+    to the flat cohort's — only the device dispatch sees the grid, via
+    ``(edge_index[i], row_index[i])`` scatter. Padding cells never
+    appear in that scatter, so their participation is permanently 0 and
+    their (zero-data) step outputs are annihilated exactly.
+    """
+    plan: object
+    client_ids: tuple[int, ...]
+    data: dict
+    profile_names: tuple[str, ...]
+    edge_index: np.ndarray          # (size,) int — edge of flat client i
+    row_index: np.ndarray           # (size,) int — grid row of flat client i
+    n_edges: int
+    cap: int
+    ef_buffer: object = None
+
+    @property
+    def size(self) -> int:
+        return len(self.client_ids)
+
+
+def build_edge_cohorts(clients: list, topology: FleetTopology) -> list:
+    """Group clients by plan (first-appearance order, exactly
+    :func:`~repro.core.federated.build_cohorts`) and arrange each plan
+    group as an edge grid. Every grid spans ALL ``topology.n_edges``
+    rows — a plan absent from some edge gets a fully-padded row there —
+    so one mesh placement fits every cohort. The per-plan common shard
+    length is the group's minimum (``stack_shards`` semantics); stacking
+    is host-side numpy (one device transfer per leaf, not per client)."""
+    import jax.numpy as jnp
+    topology.validate(len(clients))
+    edge_of = topology.edge_of()
+    groups: dict = {}
+    for c in clients:
+        groups.setdefault(c.plan, []).append(c)
+    E = topology.n_edges
+    out = []
+    for plan, cs in groups.items():
+        n = min(next(iter(c.data.values())).shape[0] for c in cs)
+        edge_idx = np.array([edge_of[c.id] for c in cs], np.int64)
+        row_idx = np.zeros(len(cs), np.int64)
+        fill = np.zeros(E, np.int64)
+        for i, e in enumerate(edge_idx):
+            row_idx[i] = fill[e]
+            fill[e] += 1
+        cap = max(1, int(fill.max()))
+        data = {}
+        for k, v0 in cs[0].data.items():
+            leaf0 = np.asarray(v0)
+            grid = np.zeros((E, cap, n) + leaf0.shape[1:], leaf0.dtype)
+            for i, c in enumerate(cs):
+                grid[edge_idx[i], row_idx[i]] = np.asarray(c.data[k])[:n]
+            data[k] = jnp.asarray(grid)
+        out.append(EdgeCohort(plan=plan,
+                              client_ids=tuple(c.id for c in cs),
+                              data=data,
+                              profile_names=tuple(c.profile_name
+                                                  for c in cs),
+                              edge_index=edge_idx, row_index=row_idx,
+                              n_edges=E, cap=cap))
+    return out
+
+
+def scatter_part(cohort: EdgeCohort, part_flat) -> np.ndarray:
+    """Scatter a flat participation mask (the sampler's order) into the
+    cohort's ``(E, cap)`` float32 grid. Padding cells stay 0."""
+    part_flat = np.asarray(part_flat)
+    grid = np.zeros((cohort.n_edges, cohort.cap), np.float32)
+    grid[cohort.edge_index, cohort.row_index] = part_flat.astype(np.float32)
+    return grid
+
+
+# ------------------------------------------------------------ placement
+
+def make_edge_mesh(n_edges: int, devices=None):
+    """A 1-D ``("data",)`` mesh for sharding the edge axis: the largest
+    divisor of ``n_edges`` that fits the available devices, so every
+    device holds a whole number of edges. On a stock CPU this is the
+    1-device mesh (the program is identical either way); under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` an 8-edge
+    fleet gets one edge per forced host device."""
+    import jax
+    devices = list(jax.devices()) if devices is None else list(devices)
+    d = max(k for k in range(1, min(n_edges, len(devices)) + 1)
+            if n_edges % k == 0)
+    return jax.sharding.Mesh(np.asarray(devices[:d]), ("data",))
+
+
+def edge_sharding(mesh):
+    """NamedSharding putting a leading edge axis on ``"data"``."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P("data"))
+
+
+def replicated_sharding(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P())
+
+
+def shard_fleet(server, mesh=None):
+    """Place a topology server's state on ``mesh``: every edge grid
+    (cohort batches and EF buffers) sharded over ``"data"`` on the edge
+    axis, params/opt_state replicated. Placement is the ONLY thing that
+    changes — the jitted round program is the same, GSPMD partitions it,
+    and the trajectory stays bitwise identical to the unsharded run
+    (tests/test_topology.py). Returns the server; ``mesh`` defaults to
+    :func:`make_edge_mesh` over the first cohort's edge count."""
+    import jax
+    grids = [c for c in server.cohorts if isinstance(c, EdgeCohort)]
+    if len(grids) != len(server.cohorts):
+        raise ValueError("shard_fleet needs a topology server (every "
+                         "cohort an EdgeCohort); build it with "
+                         "FleetSpec(topology=...) / build_edge_cohorts")
+    if mesh is None:
+        mesh = make_edge_mesh(grids[0].n_edges)
+    for c in grids:
+        if c.n_edges % mesh.devices.size:
+            raise ValueError(
+                f"{c.n_edges} edges do not divide over "
+                f"{mesh.devices.size} mesh devices; use make_edge_mesh")
+    sh, rep = edge_sharding(mesh), replicated_sharding(mesh)
+    for c in grids:
+        c.data = jax.device_put(c.data, sh)
+        if c.ef_buffer is not None:
+            c.ef_buffer = jax.device_put(c.ef_buffer, sh)
+    server.params = jax.device_put(server.params, rep)
+    server.opt_state = jax.device_put(server.opt_state, rep)
+    server.mesh = mesh
+    return server
+
+
+# -------------------------------------------------------- traffic model
+
+def cross_shard_bytes(params, plans, n_edges: int) -> float:
+    """Analytic edge→hub traffic per round, in bytes: each (plan, edge)
+    pair forwards one f32 sub-shaped update tree, one f32 mask tree and
+    one f32 loss partial to the hub's fixed-order combine. Host-only
+    shape arithmetic (``params`` may be ``jax.eval_shape`` stand-ins) —
+    and, by construction, independent of client count: adding devices to
+    an edge changes the partial SUM the edge forwards, not its shape.
+    ``plans`` is the fleet's distinct plans (one grid each)."""
+    import jax
+
+    from repro.core.federated import _local_param_struct
+    total = 0
+    for plan in plans:
+        struct = _local_param_struct(params, plan)
+        n_local = sum(int(np.prod(x.shape))
+                      for x in jax.tree.leaves(struct))
+        # update + mask trees at local shapes, f32, plus the loss scalar
+        total += n_edges * (2 * 4 * n_local + 4)
+    return float(total)

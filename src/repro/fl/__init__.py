@@ -10,6 +10,22 @@ the internal execution layer the factory assembles:
         fleet=FleetSpec(tiers=("hub", "high", "mid", "low"), n_samples=1600),
         timing=SyncDrop(deadline=0.5)), rounds=30)
     print(result.final.loss, result.sim_time)
+
+Hierarchical fleets (DESIGN.md §16) attach a :class:`FleetTopology`
+(``FleetSpec(topology=...)`` or ``FleetSpec.cycling(..., edges=E)``)
+and optionally shard the edge grids over a device mesh::
+
+    from repro.fl import FleetTopology, make_edge_mesh, simulate
+
+    sc = FLScenario(fleet=FleetSpec.cycling(tiers, 100_000, edges=8))
+    result = simulate(sc, 30, engine="scan", mesh=make_edge_mesh(8))
+
+The seed's mesh/sharding infrastructure is part of this surface too:
+:func:`make_host_mesh` / :func:`batch_axes` (``launch/mesh.py``) build
+general ``("data", "model")`` meshes, and :func:`param_spec_tree` /
+:func:`named` (``models/sharding.py``) derive parameter shardings from
+the activation-rule registry — the FL stack's edge meshes and the
+datacenter stack's tier meshes are one device-placement vocabulary.
 """
 from repro.core.compression import (CompressionPlan, DEVICE_TIERS,
                                     SubmodelSpec, default_tier_plans,
@@ -28,3 +44,11 @@ from repro.core.scenario import (AsyncBuffered, FleetSpec, FLScenario,
                                  SyncWait, TimingPolicy, UploadPolicy,
                                  build_server, scenario_census, simulate,
                                  timing_from_dict)  # noqa: F401
+from repro.core.topology import (EdgeCohort, FleetTopology,
+                                 build_edge_cohorts, cross_shard_bytes,
+                                 edge_sharding, make_edge_mesh,
+                                 replicated_sharding,
+                                 shard_fleet)  # noqa: F401
+from repro.launch.mesh import (batch_axes, make_host_mesh,
+                               num_batch_shards)  # noqa: F401
+from repro.models.sharding import (named, param_spec_tree)  # noqa: F401

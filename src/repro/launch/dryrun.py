@@ -296,6 +296,20 @@ def run_fl_census(out_dir: str, scenario_json: str = "",
               f"{r['T_download']:9.4f} {r['T']:9.4f}")
     print(f"  total upload/round (expected): "
           f"{rec['total_upload_bytes_per_round']:.0f}B")
+    if "edge_groups" in rec:
+        # hierarchical fleet picture (DESIGN.md §16): who reports at each
+        # edge, the group's Eq. (1) critical path and device->edge uplink
+        # — plus the analytic edge->hub traffic, which depends on plans
+        # and edge count but never on the client count
+        print(f"  topology: {rec['n_edges']} edge groups, edge->hub "
+              f"{rec['cross_shard_bytes_per_round']:.0f}B/round "
+              f"(client-count independent)")
+        print(f"  {'edge':>4s} {'clients':>7s} {'active_max':>10s} "
+              f"{'T_round':>9s} {'uplink':>12s}")
+        for g in rec["edge_groups"]:
+            print(f"  {g['edge']:4d} {g['clients']:7d} "
+                  f"{g['active_params_max']:10.0f} "
+                  f"{g['round_wall_time']:9.4f} {g['uplink_bytes']:11.0f}B")
     if "round_wall_time" in rec:
         drop = rec.get("n_dropped_by_deadline")
         print(f"  round wall time: {rec['round_wall_time']:.4f}s"

@@ -32,21 +32,25 @@ def test_record_top_level_schema(record):
     assert record["kind"] == "fl_bench"
     for key in ("commit", "dirty", "backend", "python", "config",
                 "rounds_per_sec", "rounds_per_sec_structured",
+                "rounds_per_sec_sharded",
                 "windows_per_sec", "speedup_scan_vs_eager",
                 "speedup_async_scan_vs_eager",
                 "speedup_structured_fused_vs_scan",
-                "speedup_width_vs_masked_step", "rows"):
+                "speedup_width_vs_masked_step",
+                "scaling_efficiency", "cross_shard_bytes", "rows"):
         assert key in record, key
     assert isinstance(record["dirty"], bool)
     cfg = record["config"]
     for key in ("clients", "plans", "rounds", "async_buffer",
-                "async_windows"):
+                "async_windows", "shard_clients", "shard_edges",
+                "shard_devices", "shard_rounds"):
         assert isinstance(cfg[key], int) and cfg[key] > 0, key
 
 
 def test_record_rate_sections(record):
     for section, paths in (("rounds_per_sec", ("eager", "scan", "pallas")),
                            ("rounds_per_sec_structured", ("scan", "fused")),
+                           ("rounds_per_sec_sharded", ("scan", "mesh")),
                            ("windows_per_sec", ("eager", "scan"))):
         for path in paths:
             rate = record[section][path]
@@ -57,10 +61,12 @@ def test_record_rate_sections(record):
 def test_record_rows_schema(record):
     rows = record["rows"]
     n = record["config"]["clients"]
+    sn = record["config"]["shard_clients"]
     for name in (f"fl/engine_eager_{n}", f"fl/engine_scan_{n}",
                  f"fl/async_scan_eager_{n}", f"fl/async_scan_engine_{n}",
                  f"fl/submodel_pallas_scan_{n}",
-                 f"fl/submodel_pallas_fused_{n}"):
+                 f"fl/submodel_pallas_fused_{n}",
+                 f"fl/shard_scan_{sn}", f"fl/shard_mesh_{sn}"):
         assert name in rows, name
     for name, row in rows.items():
         assert name.startswith("fl/"), name
@@ -102,6 +108,34 @@ def test_record_structured_fused_acceptance(record):
     assert derived["fused"]["agg_backend"] == "pallas_structured"
     losses = {d["loss_round51"] for d in derived.values()}
     assert len(losses) == 1, f"structured scan/fused loss diverged: {derived}"
+
+
+def test_record_shard_acceptance(record):
+    """The ISSUE-8 acceptance floor: a >=100k-client hierarchical fleet
+    tier, sharded and unsharded paths ending at the same loss (the cheap
+    observable of the bitwise identity pinned in tests/test_topology.py),
+    and an edge->hub traffic figure that is a function of plans and edge
+    count — NOT of the client count."""
+    cfg = record["config"]
+    assert cfg["shard_clients"] >= 100_000
+    assert cfg["shard_edges"] >= 2
+    xbytes = record["cross_shard_bytes"]
+    assert isinstance(xbytes, float) and math.isfinite(xbytes) and xbytes > 0
+    # traffic scales with edges, so per-edge bytes pin count-independence
+    assert xbytes / cfg["shard_edges"] < 1e9
+    assert record["scaling_efficiency"] > 0
+    rows = record["rows"]
+    derived = {tag: dict(kv.split("=")
+                         for kv in rows[f"fl/shard_{tag}_{cfg['shard_clients']}"]
+                         ["derived"].split(";"))
+               for tag in ("scan", "mesh")}
+    loss_key = f"loss_round{cfg['shard_rounds'] + 1}"
+    losses = {d[loss_key] for d in derived.values()}
+    assert len(losses) == 1, f"sharded/unsharded loss diverged: {derived}"
+    assert float(derived["mesh"]["cross_shard_bytes"]) == float(f"{xbytes:.0f}")
+    assert int(derived["mesh"]["mesh_devices"]) >= 1
+    assert derived["mesh"]["cross_shard_bytes"] == derived["scan"][
+        "cross_shard_bytes"]
 
 
 def test_record_commit_vintage(record):
