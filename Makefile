@@ -6,6 +6,9 @@
 #                     sharded-vs-unsharded bitwise pins in
 #                     tests/test_topology.py actually exercise a
 #                     multi-device mesh (they skip at 1 device)
+#   make test-faults- the resilience tier (DESIGN.md §17): fault
+#                     injection, quarantine defenses, retry scheduling
+#                     and kill-and-resume checkpoint bit-identity
 #   make lint       - ruff, check-only (no autofix churn); rule set is
 #                     pinned in pyproject.toml [tool.ruff]
 #   make bench-fl   - scan-engine perf record -> BENCH_fl.json (rounds/sec,
@@ -13,12 +16,15 @@
 #                     CI uploads it as an artifact per run
 PYTEST = PYTHONPATH=src python -m pytest -x -q
 
-.PHONY: test test-fast test-shard lint bench bench-fl
+.PHONY: test test-fast test-shard test-faults lint bench bench-fl
 test:
 	$(PYTEST)
 
 test-fast:
 	$(PYTEST) -m "not slow"
+
+test-faults:
+	$(PYTEST) tests/test_faults.py tests/test_checkpoint.py
 
 test-shard:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \

@@ -43,6 +43,14 @@ Fleets and runtimes come from the declarative scenario API (DESIGN.md
   sequential-scatter rounds/sec with a bit-identical trajectory,
   derived = rounds/sec, reported agg backend, compile cost and (for the
   fused row) speedup over the sequential scatter.
+- fl/fault_{path}_{n}: fault-injection overhead (DESIGN.md §17) — the
+  scan engine at n clients / 4 plans / 25 rounds, clean vs a
+  FaultPolicy with 10% churn + 1% corrupted uploads and the
+  finite-guard quarantine. Both arms run mode=fedavg through the
+  sequential-aggregation path, so the delta isolates the fault
+  machinery (host mask sampling, corruption injection, the isfinite
+  quarantine and the coverage denominator); derived = rounds/sec and
+  the overhead ratio, which tests/test_bench_record.py floors at 1.10.
 - fl/shard_{path}_{n}: the sharded hierarchical fleet runtime
   (DESIGN.md §16) at 100k clients / 4 plans / 8 edge groups through the
   scan engine — unsharded vs sharded over the edge mesh
@@ -293,6 +301,56 @@ def _submodel_pallas_rows() -> list[tuple]:
     return rows
 
 
+FAULT_N = 256
+FAULT_ROUNDS = 25
+FAULT_CHURN = 0.1
+FAULT_CORRUPT = 0.01
+
+
+def _fault_rows() -> list[tuple]:
+    """Fault-injection overhead (the ISSUE-9 acceptance config): clean
+    vs 10% churn + 1% corrupted uploads + finite-guard quarantine, both
+    arms mode=fedavg through the scan engine's sequential-aggregation
+    path (upload faults need the per-coordinate coverage denominator,
+    which the fused pallas backends don't carry). Same warm+timed
+    protocol as the fl/engine_* rows; the overhead ratio is the record's
+    ``fault_overhead`` and must stay <= 1.10."""
+    from repro.core.engine import ScanEngine
+    from repro.core.faults import FaultPolicy
+    spec = _fleet_spec(FAULT_N)
+    clients = spec.build_clients()
+    local = LocalTraining(mode="fedavg", local_steps=2, local_lr=0.1)
+    arms = (
+        ("clean", FLScenario(fleet=spec, local=local)),
+        ("faulty", FLScenario(fleet=spec, local=local,
+                              faults=FaultPolicy(seed=9,
+                                                 churn_rate=FAULT_CHURN,
+                                                 corrupt_rate=FAULT_CORRUPT))),
+    )
+    rows, us = [], {}
+    for path, scenario in arms:
+        srv = _mlp_server(scenario, clients=clients)
+        eng = ScanEngine(srv, chunk_rounds=FAULT_ROUNDS, agg="sequential")
+        t0 = time.perf_counter()
+        warm = eng.run(FAULT_ROUNDS + 1)
+        compile_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        recs = eng.run(FAULT_ROUNDS)
+        us[path] = (time.perf_counter() - t0) / FAULT_ROUNDS * 1e6
+        derived = (f"rounds_per_sec={1e6 / us[path]:.1f};"
+                   f"compile_s={compile_s:.2f};"
+                   f"loss_round{FAULT_ROUNDS + 1}={warm[-1]['loss']:.4f}")
+        if path == "faulty":
+            n_corr = sum(r["n_corrupt"] for r in warm + recs)
+            n_part = sum(r["n_participants"] for r in recs)
+            derived += (f";overhead_vs_clean={us['faulty'] / us['clean']:.3f}x;"
+                        f"churn={FAULT_CHURN};corrupt={FAULT_CORRUPT};"
+                        f"n_corrupt={n_corr};"
+                        f"participants_per_round={n_part / FAULT_ROUNDS:.1f}")
+        rows.append((f"fl/fault_{path}_{FAULT_N}", us[path], derived))
+    return rows
+
+
 SHARD_N = 100_000
 SHARD_EDGES = 8
 SHARD_ROUNDS = 10
@@ -485,6 +543,7 @@ def run() -> list[tuple]:
     rows += _async_scan_rows()
     rows += _submodel_rows()
     rows += _submodel_pallas_rows()
+    rows += _fault_rows()
     rows += _shard_rows()
 
     gcfg = get_smoke_config("granite-3-2b")
@@ -549,14 +608,16 @@ def emit_json(path: str) -> dict:
     windows), from PR 7 the fl/submodel_pallas_* rows (fused
     prefix-block aggregation vs sequential scatter on the structured
     fleet), and from PR 8 the fl/shard_* rows (100k-client sharded
-    hierarchical fleet, DESIGN.md §16), plus commit provenance (HEAD
+    hierarchical fleet, DESIGN.md §16), and from PR 9 the fl/fault_*
+    rows (fault machinery overhead vs the clean scan path, DESIGN.md
+    §17), plus commit provenance (HEAD
     sha + dirty flag), written to ``path``. Runs ONLY those sections —
     cheap enough for every CI run; ``make bench-fl`` is the local entry
     point."""
     import json
     import platform
     rows = (_engine_rows() + _async_scan_rows() + _submodel_rows()
-            + _submodel_pallas_rows() + _shard_rows())
+            + _submodel_pallas_rows() + _fault_rows() + _shard_rows())
     by_name = {name: {"us_per_call": us, "derived": derived}
                for name, us, derived in rows}
 
@@ -577,6 +638,9 @@ def emit_json(path: str) -> dict:
     def _shrps(name):
         return 1e6 / by_name[f"fl/shard_{name}_{SHARD_N}"]["us_per_call"]
 
+    def _fus(name):
+        return by_name[f"fl/fault_{name}_{FAULT_N}"]["us_per_call"]
+
     commit, dirty = _commit_hash()
     record = {
         "kind": "fl_bench",
@@ -590,7 +654,8 @@ def emit_json(path: str) -> dict:
                    "async_windows": ASYNC_SCAN_WINDOWS,
                    "shard_clients": SHARD_N, "shard_edges": SHARD_EDGES,
                    "shard_devices": len(jax.devices()),
-                   "shard_rounds": SHARD_ROUNDS},
+                   "shard_rounds": SHARD_ROUNDS,
+                   "fault_clients": FAULT_N, "fault_rounds": FAULT_ROUNDS},
         "rounds_per_sec": {"eager": _rps("eager"), "scan": _rps("scan"),
                            "pallas": _rps("pallas")},
         "rounds_per_sec_structured": {"scan": _srps("scan"),
@@ -604,6 +669,9 @@ def emit_json(path: str) -> dict:
         "speedup_width_vs_masked_step": _sub_us("masked") / _sub_us("width"),
         "speedup_structured_fused_vs_scan": _srps("fused") / _srps("scan"),
         "scaling_efficiency": _shrps("mesh") / _shrps("scan"),
+        "rounds_per_sec_faults": {"clean": 1e6 / _fus("clean"),
+                                  "faulty": 1e6 / _fus("faulty")},
+        "fault_overhead": _fus("faulty") / _fus("clean"),
         "cross_shard_bytes": _shard_xbytes(),
         "rows": by_name,
     }
@@ -630,7 +698,8 @@ if __name__ == "__main__":
               f"sharded {rec['rounds_per_sec_sharded']['mesh']:.2f} rounds/s "
               f"@ {rec['config']['shard_clients']} clients / "
               f"{rec['config']['shard_edges']} edges, "
-              f"eff {rec['scaling_efficiency']:.2f}")
+              f"eff {rec['scaling_efficiency']:.2f}; "
+              f"fault overhead {rec['fault_overhead']:.3f}x")
     else:
         for name, us, derived in run():
             print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,225 @@
+"""Bitwise run checkpointing for the federated runtimes (DESIGN.md §17).
+
+:func:`save_run_state` serializes EVERYTHING a runtime needs to continue
+a trajectory — params, opt_state, per-cohort (or per-client) error-
+feedback buffers, the async version store, the virtual-clock scheduler's
+heap/sequence counters, and the round history — as one
+:func:`~repro.checkpoint.checkpointer.save_pytree` npz (arrays) plus a
+JSON sidecar (scalars + the scenario spec). :func:`restore_run_state`
+loads the pair back into a freshly built server.
+
+Why this is BITWISE and not merely approximate: every stochastic draw in
+the runtimes is stateless per round — participation is
+``default_rng([seed, step])``, fault masks are
+``default_rng([fault_seed, tag, step])``, scheduler jitter/retry delays
+are per-``(seed, client, dispatch)`` — so there is no RNG *state* to
+serialize; the counters (round index, per-client dispatch counts, the
+sequence number) ARE the state, and they are exact integers. Arrays
+round-trip exactly through npz; the scheduler's float64 virtual-clock
+times round-trip exactly through JSON (Python's ``repr`` float contract).
+A run killed at round k and resumed therefore replays the identical
+op-by-op trajectory of the uninterrupted run, in the eager and scan
+engines alike (pinned in ``tests/test_checkpoint.py``).
+
+The saved scenario spec guards resumption: restoring under a scenario
+whose ``to_dict()`` differs from the saved one raises, because the
+trajectory would silently diverge from both runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import load_pytree, save_pytree
+
+_SCHEMA = 1
+
+
+def _path(directory: str, step: int, ext: str) -> str:
+    return os.path.join(directory, f"state_{step:08d}.{ext}")
+
+
+def latest_run_step(directory: str) -> int | None:
+    """The newest checkpoint step in ``directory`` (None when empty).
+    The JSON sidecar is the commit marker — it is written (atomically)
+    after the npz, so its presence implies a complete pair."""
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"state_(\d+)\.json$", f))]
+    return max(steps) if steps else None
+
+
+def _server_kind(server) -> str:
+    return type(server).__name__
+
+
+def _cohort_ef_templates(server):
+    """(ef-carrying cohort indices, matching zero-valued template trees)
+    — EF buffers are lazily initialized, so only cohorts whose buffer
+    exists are saved, and the template is rebuilt from the same
+    allocation helpers the runtime uses."""
+    from repro.core.federated import (_init_cohort_ef, _init_edge_ef,
+                                      _local_param_struct)
+    from repro.core.topology import EdgeCohort
+    idx, tmpl = [], {}
+    for ci, cohort in enumerate(server.cohorts):
+        if cohort.ef_buffer is None:
+            continue
+        idx.append(ci)
+        struct = _local_param_struct(server.params, cohort.plan)
+        if isinstance(cohort, EdgeCohort):
+            tmpl[str(ci)] = _init_edge_ef(cohort.n_edges, cohort.cap, struct)
+        else:
+            tmpl[str(ci)] = _init_cohort_ef(cohort.size, struct)
+    return idx, tmpl
+
+
+def save_run_state(server, directory: str, *, scenario=None,
+                   keep: int = 3) -> str:
+    """Snapshot ``server`` into ``directory`` as
+    ``state_{step:08d}.{npz,json}``; keeps the newest ``keep`` pairs.
+    Returns the npz path. ``scenario`` (optional but recommended) is
+    embedded for the restore-time mismatch guard."""
+    kind = _server_kind(server)
+    arrays = {"params": server.params, "opt_state": server.opt_state}
+    meta = {"schema": _SCHEMA, "server": kind,
+            "scenario": None if scenario is None else scenario.to_dict(),
+            "history": server.history}
+    if kind == "FLServer":
+        step = server.step
+        ef_clients = [i for i, c in enumerate(server.clients)
+                      if c.ef_buffer is not None]
+        meta["ef_clients"] = ef_clients
+        arrays["client_ef"] = {str(i): server.clients[i].ef_buffer
+                               for i in ef_clients}
+    elif kind == "AsyncFLServer":
+        step = server.version
+        idx = [ci for ci, c in enumerate(server.cohorts)
+               if c.ef_buffer is not None]
+        meta["ef_cohorts"] = idx
+        arrays["ef"] = {str(ci): server.cohorts[ci].ef_buffer for ci in idx}
+        arrays["versions"] = {str(v): t for v, t in server._versions.items()}
+        sched = server._sched
+        meta["async"] = {
+            "version": server.version,
+            "versions": sorted(server._versions),
+            "refs": {str(v): n for v, n in server._refs.items()},
+            # the heap list satisfies the heap invariant as stored, and
+            # JSON preserves list order + float64 bits (repr round-trip)
+            "heap": [[t, s, c, v] for (t, s, c, v) in sched._heap],
+            "seq": sched._seq,
+            "dispatches": list(sched._dispatches),
+        }
+    else:                               # CohortFLServer
+        step = server.step
+        idx = [ci for ci, c in enumerate(server.cohorts)
+               if c.ef_buffer is not None]
+        meta["ef_cohorts"] = idx
+        arrays["ef"] = {str(ci): server.cohorts[ci].ef_buffer for ci in idx}
+    meta["step"] = step
+
+    os.makedirs(directory, exist_ok=True)
+    npz = _path(directory, step, "npz")
+    save_pytree(arrays, npz)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".json")
+    with os.fdopen(fd, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, _path(directory, step, "json"))
+    # retention: drop the oldest pairs beyond ``keep``
+    steps = sorted([int(m.group(1)) for f in os.listdir(directory)
+                    if (m := re.match(r"state_(\d+)\.json$", f))])
+    for s in steps[:-keep] if keep else []:
+        for ext in ("json", "npz"):
+            try:
+                os.remove(_path(directory, s, ext))
+            except FileNotFoundError:
+                pass
+    return npz
+
+
+def restore_run_state(server, directory: str, *, scenario=None,
+                      step: int | None = None) -> int:
+    """Load the checkpoint at ``step`` (default: latest) from
+    ``directory`` into ``server`` (a freshly built runtime of the same
+    kind over the same scenario) and return the restored step count.
+    Raises on a missing checkpoint, a server-kind mismatch, or a scenario
+    whose spec differs from the saved one."""
+    if step is None:
+        step = latest_run_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no run checkpoints in {directory!r}")
+    with open(_path(directory, step, "json")) as f:
+        meta = json.load(f)
+    if meta["schema"] != _SCHEMA:
+        raise ValueError(f"unknown checkpoint schema {meta['schema']}")
+    kind = _server_kind(server)
+    if meta["server"] != kind:
+        raise ValueError(f"checkpoint was written by {meta['server']}, "
+                         f"cannot restore into {kind}")
+    if (scenario is not None and meta["scenario"] is not None
+            and meta["scenario"] != scenario.to_dict()):
+        raise ValueError(
+            "scenario mismatch: the checkpoint was written under a "
+            "different FLScenario spec — resuming would silently diverge "
+            "from both trajectories")
+
+    tmpl = {"params": server.params, "opt_state": server.opt_state}
+    if kind == "FLServer":
+        tmpl["client_ef"] = {
+            str(i): jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                 server.params)
+            for i in meta["ef_clients"]}
+    else:
+        _, ef_tmpl = _cohort_ef_templates(server)
+        want = {str(ci) for ci in meta["ef_cohorts"]}
+        missing = want - set(ef_tmpl)
+        if missing:
+            # lazily-initialized buffers the fresh server has not touched
+            # yet: materialize templates for exactly the saved cohorts
+            from repro.core.federated import (_init_cohort_ef, _init_edge_ef,
+                                              _local_param_struct)
+            from repro.core.topology import EdgeCohort
+            for key in missing:
+                cohort = server.cohorts[int(key)]
+                struct = _local_param_struct(server.params, cohort.plan)
+                ef_tmpl[key] = (
+                    _init_edge_ef(cohort.n_edges, cohort.cap, struct)
+                    if isinstance(cohort, EdgeCohort)
+                    else _init_cohort_ef(cohort.size, struct))
+        tmpl["ef"] = {k: ef_tmpl[k] for k in want}
+        if kind == "AsyncFLServer":
+            tmpl["versions"] = {str(v): server.params
+                                for v in meta["async"]["versions"]}
+
+    loaded = load_pytree(tmpl, _path(directory, step, "npz"))
+    server.params = loaded["params"]
+    server.opt_state = loaded["opt_state"]
+    server.history = [dict(r) for r in meta["history"]]
+    if kind == "FLServer":
+        for i in meta["ef_clients"]:
+            server.clients[i].ef_buffer = loaded["client_ef"][str(i)]
+        server.step = meta["step"]
+    else:
+        for ci in meta["ef_cohorts"]:
+            server.cohorts[ci].ef_buffer = loaded["ef"][str(ci)]
+        if kind == "AsyncFLServer":
+            a = meta["async"]
+            server.version = a["version"]
+            server._versions = {int(v): loaded["versions"][str(v)]
+                                for v in a["versions"]}
+            server._refs = {int(k): n for k, n in a["refs"].items()}
+            sched = server._sched
+            sched.version = a["version"]
+            sched._seq = a["seq"]
+            sched._dispatches = list(a["dispatches"])
+            sched._heap = [(float(t), int(s), int(c), int(v))
+                           for t, s, c, v in a["heap"]]
+        else:
+            server.step = meta["step"]
+    return meta["step"]

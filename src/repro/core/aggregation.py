@@ -50,7 +50,7 @@ def accumulate(acc, grads, masks, weight):
 
 
 def accumulate_cohort(acc, grad_sum, masks, weight, count,
-                      staleness_weight=None):
+                      staleness_weight=None, cov=None):
     """A whole cohort's contribution in one shot (DESIGN.md §9).
 
     ``grad_sum`` is the participation-masked SUM of the cohort's per-client
@@ -80,12 +80,27 @@ def accumulate_cohort(acc, grad_sum, masks, weight, count,
     exact. With this ordering the contraction is bit-transparent, so the
     eager op-by-op chain and the scan engines' fused bodies agree
     bitwise. Do not "simplify" it back to ``a + scale * m * g``.
+
+    ``cov`` (DESIGN.md §17) is the fault layer's per-coordinate COVERAGE
+    tree — the participation-weighted sum of the cohort's per-element
+    finite-guard 0/1 masks. When given it replaces the scalar ``count``
+    in the denominator (``den += m * (weight * cov)``): a quarantined
+    coordinate contributed 0 to the numerator, so its coverage must not
+    inflate the denominator either, or surviving clients' updates would
+    be attenuated. ``cov`` is integer-valued (a sum of exact 0/1 masks),
+    so ``weight * cov`` rounds exactly like ``weight * count`` and the
+    association invariant above is preserved verbatim. Dense ``cov``
+    requires dense denominators (``zeros_like_acc(dense_den=True)``).
     """
     num, den = acc
     scale = weight if staleness_weight is None else weight * staleness_weight
     num = jax.tree.map(lambda a, g, m: a + m * (scale * g),
                        num, grad_sum, masks)
-    den = jax.tree.map(lambda a, m: a + m * (weight * count), den, masks)
+    if cov is None:
+        den = jax.tree.map(lambda a, m: a + m * (weight * count), den, masks)
+    else:
+        den = jax.tree.map(lambda a, m, c: a + m * (weight * c),
+                           den, masks, cov)
     return num, den
 
 
@@ -104,7 +119,7 @@ def zeros_like_acc(params, dense_den: bool = False):
 
 
 def scatter_accumulate(acc, grad_sum, masks, spec, weight, count,
-                       staleness_weight=None):
+                       staleness_weight=None, cov=None):
     """A structured cohort's contribution (DESIGN.md §13): coverage-
     counted scatter into the shared accumulators.
 
@@ -123,28 +138,33 @@ def scatter_accumulate(acc, grad_sum, masks, spec, weight, count,
     mixed fleets dispatch every cohort through this one entry point.
     ``den`` must be dense for sliced leaves: build the accumulators with
     ``zeros_like_acc(params, dense_den=True)``. ``staleness_weight`` has
-    :func:`accumulate_cohort`'s numerator-only semantics.
+    :func:`accumulate_cohort`'s numerator-only semantics; ``cov`` has its
+    per-coordinate denominator-coverage semantics (at the cohort's LOCAL
+    shapes — a sliced cohort's coverage scatters into the same prefix
+    block as its update).
     """
     if spec is None:
         return accumulate_cohort(acc, grad_sum, masks, weight, count,
-                                 staleness_weight=staleness_weight)
+                                 staleness_weight=staleness_weight, cov=cov)
     num, den = acc
     scale = weight if staleness_weight is None else weight * staleness_weight
     n_leaves, treedef = jax.tree_util.tree_flatten(num)
     d_leaves = jax.tree.leaves(den)
     g_leaves = jax.tree.leaves(grad_sum)
     m_leaves = jax.tree.leaves(masks)
+    c_leaves = jax.tree.leaves(cov) if cov is not None else [None] * len(m_leaves)
     out_n, out_d = [], []
     # m * (scalar product): accumulate_cohort's association invariant
-    for n, d, g, m, sl in zip(n_leaves, d_leaves, g_leaves, m_leaves,
-                              spec.slices):
+    for n, d, g, m, c, sl in zip(n_leaves, d_leaves, g_leaves, m_leaves,
+                                 c_leaves, spec.slices):
+        cnt = count if c is None else c
         if sl is None:
             out_n.append(n + m * (scale * g))
-            out_d.append(d + m * (weight * count))
+            out_d.append(d + m * (weight * cnt))
         else:
             idx = tuple(slice(0, k) for k in sl)
             out_n.append(n.at[idx].add(m * (scale * g)))
-            out_d.append(d.at[idx].add(m * (weight * count)))
+            out_d.append(d.at[idx].add(m * (weight * cnt)))
     return (jax.tree_util.tree_unflatten(treedef, out_n),
             jax.tree_util.tree_unflatten(treedef, out_d))
 

@@ -93,9 +93,12 @@ import numpy as np
 
 from repro.core.aggregation import (accumulate_cohort, finalize,
                                     scatter_accumulate, zeros_like_acc)
+from repro.core.faults import (availability_mask, corrupt_mask,
+                               corrupt_seq_mask, dropout_mask)
 from repro.core.federated import (AsyncFLServer, CohortFLServer, _apply_fns,
-                                  _init_cohort_ef, _init_edge_ef,
-                                  _local_param_struct, cohort_step_fn,
+                                  _guard_cov_active, _init_cohort_ef,
+                                  _init_edge_ef, _local_param_struct,
+                                  cohort_step_fn, fault_cohort_step_fn,
                                   window_groups)
 from repro.core.schedule import materialize_windows
 from repro.core.topology import EdgeCohort, scatter_part
@@ -159,10 +162,30 @@ class ScanEngine:
                 "topology fleets aggregate per (plan, edge) partial — "
                 "the fused pallas backends have no edge axis; use "
                 "agg='sequential'")
-        self._steps = [cohort_step_fn(srv.model.loss_fn, c.plan, srv.mode,
-                                      srv.local_steps, srv.local_lr,
-                                      srv.upload_quant)
-                       for c in srv.cohorts]
+        # fault layer (DESIGN.md §17): upload corruption + defenses swap
+        # each cohort's step for its fault twin (per-client branches with
+        # the inject->guard->clip pipeline); availability/dropout faults
+        # only reshape the host-precomputed masks. The fused pallas
+        # backends carry no coverage column, so upload faults keep the
+        # sequential (bitwise) aggregation, like topology fleets do.
+        self._fault_uploads = (srv.faults is not None
+                               and srv.faults.touches_uploads)
+        self._guard_cov = _guard_cov_active(srv.faults)
+        if self._fault_uploads and self.agg != "sequential":
+            raise ValueError(
+                "upload corruption/defenses aggregate with per-coordinate "
+                "coverage denominators — the fused pallas backends have "
+                "no coverage column; use agg='sequential'")
+        if self._fault_uploads:
+            self._steps = [fault_cohort_step_fn(
+                srv.model.loss_fn, c.plan, srv.mode, srv.local_steps,
+                srv.local_lr, srv.upload_quant, srv.faults)
+                for c in srv.cohorts]
+        else:
+            self._steps = [cohort_step_fn(srv.model.loss_fn, c.plan,
+                                          srv.mode, srv.local_steps,
+                                          srv.local_lr, srv.upload_quant)
+                           for c in srv.cohorts]
         if self._topology:
             self._steps = [jax.vmap(s, in_axes=(None, 0, 0, 0))
                            for s in self._steps]
@@ -215,8 +238,9 @@ class ScanEngine:
         identity, property-tested). Structured cohorts scatter their
         sub-shaped update into the prefix block their slice covers,
         exactly like the eager round's ``scatter_accumulate`` call."""
-        acc = zeros_like_acc(params, dense_den=self._any_structured)
-        for ci, (g_sum, masks, weight, count) in enumerate(per_cohort):
+        acc = zeros_like_acc(params, dense_den=(self._any_structured
+                                                or self._guard_cov))
+        for ci, (g_sum, masks, weight, count, cov) in enumerate(per_cohort):
             if self._topology:
                 # hub combine (DESIGN.md §16): chain the per-edge partial
                 # accumulators in fixed edge order — the same chain the
@@ -229,7 +253,7 @@ class ScanEngine:
                         self._specs[ci], jnp.float32(weight), count[e])
                 continue
             acc = scatter_accumulate(acc, g_sum, masks, self._specs[ci],
-                                     jnp.float32(weight), count)
+                                     jnp.float32(weight), count, cov=cov)
         return finalize(acc)
 
     def _aggregate_pallas_structured(self, params, per_cohort):
@@ -251,12 +275,13 @@ class ScanEngine:
         from repro.kernels.structured_scatter.ops import (
             structured_scatter, structured_scatter_batched)
         leaves_p, treedef = jax.tree_util.tree_flatten(params)
-        leaves_g = [jax.tree.leaves(g) for (g, _, _, _) in per_cohort]
-        leaves_m = [jax.tree.leaves(m) for (_, m, _, _) in per_cohort]
-        wn = jnp.asarray([w for (_, _, w, _) in per_cohort], jnp.float32)
+        leaves_g = [jax.tree.leaves(g) for (g, _, _, _, _) in per_cohort]
+        leaves_m = [jax.tree.leaves(m) for (_, m, _, _, _) in per_cohort]
+        wn = jnp.asarray([w for (_, _, w, _, _) in per_cohort], jnp.float32)
         # the denominator column rounds w·n_part one multiply early,
         # exactly like scatter_accumulate's ``m * (weight * count)``
-        wd = jnp.stack([jnp.float32(w) * c for (_, _, w, c) in per_cohort])
+        wd = jnp.stack([jnp.float32(w) * c
+                        for (_, _, w, c, _) in per_cohort])
         groups: dict = {}
         for li, p in enumerate(leaves_p):
             sig = (tuple(p.shape),
@@ -293,10 +318,11 @@ class ScanEngine:
             return self._aggregate_pallas_structured(params, per_cohort)
         from repro.kernels.grad_aggregate import grad_aggregate
         leaves_p, treedef = jax.tree_util.tree_flatten(params)
-        leaves_g = [jax.tree.leaves(g) for (g, _, _, _) in per_cohort]
-        leaves_m = [jax.tree.leaves(m) for (_, m, _, _) in per_cohort]
-        wn = jnp.asarray([w for (_, _, w, _) in per_cohort], jnp.float32)
-        wd = jnp.stack([jnp.float32(w) * c for (_, _, w, c) in per_cohort])
+        leaves_g = [jax.tree.leaves(g) for (g, _, _, _, _) in per_cohort]
+        leaves_m = [jax.tree.leaves(m) for (_, m, _, _, _) in per_cohort]
+        wn = jnp.asarray([w for (_, _, w, _, _) in per_cohort], jnp.float32)
+        wd = jnp.stack([jnp.float32(w) * c
+                        for (_, _, w, c, _) in per_cohort])
         out = []
         for li, p in enumerate(leaves_p):
             g_t = [lg[li] for lg in leaves_g]
@@ -309,7 +335,7 @@ class ScanEngine:
                 # aggregation formula lives in aggregation.py, not here
                 acc = (jnp.zeros(p.shape, jnp.float32),
                        jnp.zeros((), jnp.float32))
-                for t, (_, _, w, count) in enumerate(per_cohort):
+                for t, (_, _, w, count, _) in enumerate(per_cohort):
                     acc = accumulate_cohort(acc, g_t[t], m_t[t],
                                             jnp.float32(w), count)
                 out.append(finalize(acc))
@@ -337,8 +363,15 @@ class ScanEngine:
                                     self._local_structs[ci])
                       if self._topology
                       else _init_cohort_ef(c.size, self._local_structs[ci]))
-            g_sum, masks, l_sum, new_ef = jax.lax.optimization_barrier(
-                step(params, datas[ci], part, ef))
+            cov = None
+            if self._fault_uploads:
+                g_sum, masks, cov, l_sum, new_ef = (
+                    jax.lax.optimization_barrier(
+                        step(params, datas[ci], part, ef,
+                             x["corrupt"][ci], x["uid"][ci])))
+            else:
+                g_sum, masks, l_sum, new_ef = jax.lax.optimization_barrier(
+                    step(params, datas[ci], part, ef))
             new_efs.append(new_ef if srv.error_feedback else efs[ci])
             if self._topology:
                 # topology round: part is the (E, cap) grid, l_sum is the
@@ -349,15 +382,19 @@ class ScanEngine:
                 # exactly the eager expressions) in _run_chunk.
                 per_cohort.append((g_sum, masks,
                                    srv.cohorts[ci].plan.weight,
-                                   x["count"][ci]))
+                                   x["count"][ci], None))
                 for e in range(srv.cohorts[ci].n_edges):
                     loss_sum = loss_sum + l_sum[e]
                 continue
             per_cohort.append((g_sum, masks, srv.cohorts[ci].plan.weight,
-                               jnp.sum(part)))
+                               jnp.sum(part), cov))
             loss_sum = loss_sum + l_sum
+            # crashed clients burn wall-clock but upload nothing: the wall
+            # maxes over the pre-dropout masks (``wpart``, present only
+            # under a FaultPolicy), bytes/counts over the active ones
+            wp = x["wpart"][ci] if "wpart" in x else part
             wall = jnp.maximum(wall, jnp.max(
-                jnp.where(part > 0, self._T_dev[ci], -np.inf)))
+                jnp.where(wp > 0, self._T_dev[ci], -np.inf)))
             up_bytes = up_bytes + jnp.dot(part, self._payload_dev[ci])
             n_part = n_part + jnp.sum(part)
 
@@ -387,37 +424,88 @@ class ScanEngine:
 
     def _host_masks(self, R: int, participation=None):
         """The chunk's stacked participation: replay the eager path's
-        per-round ``default_rng([seed, step])`` sampling and float64
-        deadline comparison, entirely on host. Returns (per-round
-        bool-mask lists, per-round drop counts)."""
+        per-round ``default_rng([seed, step])`` sampling, float64
+        deadline comparison, and (under a FaultPolicy) the stateless
+        availability/dropout/corruption draws, entirely on host — in the
+        eager round's exact order: sample -> availability -> deadline
+        drop -> mid-round crash. Returns per-round lists of ACTIVE masks
+        (what uploads), pre-crash masks (what burns wall-clock),
+        deadline-drop counts, crash counts, and corrupted-upload masks
+        (active rows only — an inactive row must never carry injected
+        non-finites into the participation sum)."""
         srv = self.server
-        parts, dropped = [], []
+        flt = srv.faults
+        n_total = srv.n_clients
+        parts, wparts, dropped, dropouts, corrs = [], [], [], [], []
         for r in range(R):
-            rng = np.random.default_rng([srv.seed, srv.step + r])
+            step = srv.step + r
+            rng = np.random.default_rng([srv.seed, step])
             sampled = (srv._sample_participation(rng)
                        if participation is None
                        else [np.asarray(p, bool) for p in participation[r]])
-            n_dropped, cur = 0, []
+            if flt is not None:
+                avail = availability_mask(flt, n_total, step)
+                drops = dropout_mask(flt, n_total, step)
+                corr = corrupt_mask(flt, n_total, step)
+            n_dropped, n_do = 0, 0
+            cur, curw, curc = [], [], []
+            off = 0
             for ci in range(len(srv.cohorts)):
+                off0, off = off, off + srv.cohorts[ci].size
                 part = np.asarray(sampled[ci], bool).copy()
+                if flt is not None:
+                    part &= avail[off0:off]
                 if srv.straggler == "drop":
                     late = self._times[ci]["T"] > srv.deadline
                     n_dropped += int(np.sum(part & late))
                     part &= ~late
-                cur.append(part)
+                active = part
+                if flt is not None and flt.dropout_rate > 0.0:
+                    crashed = part & drops[off0:off]
+                    n_do += int(crashed.sum())
+                    active = part & ~crashed
+                curw.append(part)
+                cur.append(active)
+                if self._fault_uploads:
+                    curc.append(corr[off0:off] & active)
             parts.append(cur)
+            wparts.append(curw)
             dropped.append(n_dropped)
-        return parts, dropped
+            dropouts.append(n_do)
+            corrs.append(curc)
+        return parts, wparts, dropped, dropouts, corrs
 
     def _run_chunk(self, R: int, participation=None) -> list[dict]:
         srv = self.server
         step0 = srv.step
-        parts, dropped = self._host_masks(R, participation)
+        parts, wparts, dropped, dropouts, corrs = self._host_masks(
+            R, participation)
         xs = {
             "step": jnp.asarray(np.arange(step0, step0 + R), jnp.int32),
             "has": jnp.asarray([any(p.any() for p in parts[r])
                                 for r in range(R)]),
         }
+        if srv.faults is not None and not self._topology:
+            xs["wpart"] = tuple(
+                jnp.asarray(np.stack([wparts[r][ci] for r in range(R)]),
+                            jnp.float32)
+                for ci in range(len(srv.cohorts)))
+        if self._fault_uploads:
+            offs = np.cumsum([0] + [c.size for c in srv.cohorts])
+            n_total = srv.n_clients
+            xs["corrupt"] = tuple(
+                jnp.asarray(np.stack([corrs[r][ci] for r in range(R)]),
+                            jnp.float32)
+                for ci in range(len(srv.cohorts)))
+            # per-upload uid = step * n_clients + flat client index — the
+            # eager fault dispatch's exact key, so the element-subset
+            # corruption PRNG draws identically in both paths
+            xs["uid"] = tuple(
+                jnp.asarray(np.stack(
+                    [(step0 + r) * n_total + np.arange(offs[ci],
+                                                       offs[ci + 1])
+                     for r in range(R)]), jnp.int32)
+                for ci in range(len(srv.cohorts)))
         if self._topology:
             # grid xs (DESIGN.md §16): the flat sampled masks scattered
             # into each cohort's (E, cap) grid plus per-edge participant
@@ -468,23 +556,31 @@ class ScanEngine:
                 # Eq. (1) record fields host-side, float64 — verbatim the
                 # eager round's expressions over the same flat masks, so
                 # topology records match the eager path EXACTLY (the flat
-                # engine's in-program f32 wall/bytes are approximate)
+                # engine's in-program f32 wall/bytes are approximate).
+                # Wall maxes over the pre-crash masks, bytes/counts over
+                # the active ones, exactly like the eager fault round.
                 n_p, wall, up = 0, 0.0, 0.0
                 for ci, p in enumerate(parts[r]):
+                    wp = wparts[r][ci]
+                    if wp.any():
+                        wall = max(wall,
+                                   float(self._times[ci]["T"][wp].max()))
                     if p.any():
                         n_p += int(p.sum())
-                        wall = max(wall,
-                                   float(self._times[ci]["T"][p].max()))
                         up += float(
                             self._times[ci]["payload_bytes"][p].sum())
             else:
                 n_p = int(m["n_participants"][r])
-                wall = float(m["wall"][r]) if n_p else 0.0
+                # the in-program wall is -inf when nothing ran (it can be
+                # finite with n_p == 0: crashed clients burn wall-clock)
+                wall = float(m["wall"][r])
+                wall = wall if np.isfinite(wall) else 0.0
                 up = float(m["upload_bytes"][r])
             rec = {
                 "step": step0 + r + 1,
-                "loss": (float(m["loss_sum"][r]) / n_p if n_p
-                         else float("nan")),
+                # a zero-participant round is a graceful no-op: loss None
+                # (never a NaN sentinel that poisons downstream means)
+                "loss": (float(m["loss_sum"][r]) / n_p if n_p else None),
                 "n_participants": n_p,
                 "n_dropped": dropped[r],
                 "round_wall_time": (
@@ -492,6 +588,10 @@ class ScanEngine:
                     else wall),
                 "total_upload_bytes": up,
             }
+            if srv.faults is not None:
+                rec["n_dropouts"] = dropouts[r]
+                rec["n_corrupt"] = (int(np.sum([c.sum() for c in corrs[r]]))
+                                    if self._fault_uploads else 0)
             srv.history.append(rec)
             recs.append(rec)
         self.chunks_run += 1
@@ -620,10 +720,23 @@ class WindowScanEngine:
             raise ValueError(
                 "chunk_windows must be >= 0 (0 = one chunk per run)")
         srv = self.server
-        self._steps = [cohort_step_fn(srv.model.loss_fn, c.plan, srv.mode,
-                                      srv.local_steps, srv.local_lr,
-                                      srv.upload_quant)
-                       for c in srv.cohorts]
+        # upload faults (DESIGN.md §17) swap each cohort step for its
+        # fault twin; the scheduler-side dropout/retry model needs no
+        # engine support at all — materialize_windows replays the heap's
+        # retry-delayed arrival times element-wise by construction
+        self._fault_uploads = (srv.faults is not None
+                               and srv.faults.touches_uploads)
+        self._guard_cov = _guard_cov_active(srv.faults)
+        if self._fault_uploads:
+            self._steps = [fault_cohort_step_fn(
+                srv.model.loss_fn, c.plan, srv.mode, srv.local_steps,
+                srv.local_lr, srv.upload_quant, srv.faults)
+                for c in srv.cohorts]
+        else:
+            self._steps = [cohort_step_fn(srv.model.loss_fn, c.plan,
+                                          srv.mode, srv.local_steps,
+                                          srv.local_lr, srv.upload_quant)
+                           for c in srv.cohorts]
         # per-cohort width-slice specs / local shapes, same memo the eager
         # server's dispatch path uses (shapes are static per server)
         from repro.core.federated import _memo_submodel_spec
@@ -648,8 +761,12 @@ class WindowScanEngine:
         self._mask_ones = []
         for ci, c in enumerate(srv.cohorts):
             ef0 = _init_cohort_ef(c.size, self._local_structs[ci])
-            out = jax.eval_shape(self._steps[ci], self._acc_struct, c.data,
-                                 jnp.zeros(c.size, jnp.float32), ef0)
+            args = (self._acc_struct, c.data,
+                    jnp.zeros(c.size, jnp.float32), ef0)
+            if self._fault_uploads:
+                args += (jnp.zeros(c.size, jnp.float32),
+                         jnp.zeros(c.size, jnp.int32))
+            out = jax.eval_shape(self._steps[ci], *args)
             self._mask_ones.append(jax.tree.map(
                 lambda s: jnp.ones(s.shape, s.dtype), out[1]))
         self._mask_ones = tuple(self._mask_ones)
@@ -675,7 +792,8 @@ class WindowScanEngine:
         srv = self.server
         ring, opt_state, efs = carry
         acc = zeros_like_acc(self._acc_struct,
-                             dense_den=self._any_structured)
+                             dense_den=(self._any_structured
+                                        or self._guard_cov))
         loss_sum = jnp.float32(0.0)
         new_efs = []
         for ci, step in enumerate(self._steps):
@@ -702,8 +820,14 @@ class WindowScanEngine:
                          _ci=ci, _sl=sl, _step=step):
                     pv = jax.tree.map(lambda r: r[x["slot"][_ci][_sl]],
                                       ring)
-                    g_sum, masks, l_sum, new_ef = _step(
-                        pv, datas[_ci], x["part"][_ci][_sl], ef)
+                    cov = None
+                    if self._fault_uploads:
+                        g_sum, masks, cov, l_sum, new_ef = _step(
+                            pv, datas[_ci], x["part"][_ci][_sl], ef,
+                            x["corrupt"][_ci][_sl], x["uid"][_ci][_sl])
+                    else:
+                        g_sum, masks, l_sum, new_ef = _step(
+                            pv, datas[_ci], x["part"][_ci][_sl], ef)
                     # exact ×1 re-anchor: keeps constant-foldable masks
                     # runtime-valued so the accumulate's FMA contraction
                     # stays on the exact 0/1-mask product (association
@@ -714,7 +838,7 @@ class WindowScanEngine:
                         acc, g_sum, masks, self._specs[_ci],
                         jnp.float32(srv.cohorts[_ci].plan.weight),
                         x["count"][_ci][_sl],
-                        staleness_weight=x["disc"][_ci][_sl])
+                        staleness_weight=x["disc"][_ci][_sl], cov=cov)
                     return acc, loss_sum + l_sum, (
                         new_ef if srv.error_feedback else ef)
 
@@ -770,7 +894,22 @@ class WindowScanEngine:
         versions = plan.version0 + np.arange(W)
         for ci in range(C):
             slot[ci][:] = (versions % cap)[:, None]     # padded: live params
+        if self._fault_uploads:
+            # corruption is keyed by the upload's dispatch SEQUENCE number
+            # (the eager step's exact per-upload uid), replayed from the
+            # plan's seq array; padded slots stay all-zero — no injection
+            corrupt = [np.zeros((W, self._n_slots[ci], c.size), np.float32)
+                       for ci, c in enumerate(srv.cohorts)]
+            uids = [np.zeros((W, self._n_slots[ci], c.size), np.int32)
+                    for ci, c in enumerate(srv.cohorts)]
         for w, gs in enumerate(per_win):
+            if self._fault_uploads:
+                flags = corrupt_seq_mask(srv.faults, plan.upload_seq[w])
+                info = {}
+                for k in range(plan.buffer_size):
+                    ci, row = srv._slots[int(plan.client[w][k])]
+                    info[(ci, row)] = (int(plan.upload_seq[w][k]),
+                                       float(flags[k]))
             li = [0] * C
             for (ci, v), rows in gs:
                 sl = li[ci]
@@ -780,13 +919,21 @@ class WindowScanEngine:
                 count[ci][w, sl] = len(rows)
                 disc[ci][w, sl] = np.float32(
                     (1.0 + (int(versions[w]) - v)) ** (-srv.staleness_exp))
-        return {"part": tuple(jnp.asarray(p) for p in part),
-                "slot": tuple(jnp.asarray(s) for s in slot),
-                "count": tuple(jnp.asarray(c) for c in count),
-                "disc": tuple(jnp.asarray(d) for d in disc),
-                "cur": jnp.asarray(versions % cap, jnp.int32),
-                "write": jnp.asarray((versions + 1) % cap, jnp.int32),
-                "step": jnp.asarray(versions, jnp.int32)}
+                if self._fault_uploads:
+                    for r in rows:
+                        uids[ci][w, sl, r], corrupt[ci][w, sl, r] = \
+                            info[(ci, r)]
+        xs = {"part": tuple(jnp.asarray(p) for p in part),
+              "slot": tuple(jnp.asarray(s) for s in slot),
+              "count": tuple(jnp.asarray(c) for c in count),
+              "disc": tuple(jnp.asarray(d) for d in disc),
+              "cur": jnp.asarray(versions % cap, jnp.int32),
+              "write": jnp.asarray((versions + 1) % cap, jnp.int32),
+              "step": jnp.asarray(versions, jnp.int32)}
+        if self._fault_uploads:
+            xs["corrupt"] = tuple(jnp.asarray(c) for c in corrupt)
+            xs["uid"] = tuple(jnp.asarray(u) for u in uids)
+        return xs
 
     def _ring_init(self):
         """The version store as a ring: every live version's params at
@@ -881,6 +1028,11 @@ class WindowScanEngine:
                     "total_upload_bytes": sum(
                         srv._payload_bytes[int(c)] for c in plan.client[w]),
                 }
+                if srv.faults is not None:
+                    rec["n_corrupt"] = (
+                        int(corrupt_seq_mask(srv.faults,
+                                             plan.upload_seq[w]).sum())
+                        if self._fault_uploads else 0)
                 srv.history.append(rec)
                 recs.append(rec)
             done += Wc

@@ -1,0 +1,312 @@
+"""Declarative fault injection for the federated runtimes (DESIGN.md §17).
+
+Real constrained fleets are not polite: devices follow diurnal duty
+cycles, churn in and out, crash mid-round, and occasionally ship garbage
+bits. :class:`FaultPolicy` makes those regimes a declarative, replayable
+part of an :class:`~repro.core.scenario.FLScenario` — frozen, hashable
+and JSON-round-tripping like every other policy — and this module holds
+both halves of the machinery:
+
+HOST side (numpy, stateless per round). Every fault draw is seeded by
+``(policy.seed, tag, round)`` — a pure function of the round index, never
+of accumulated RNG state — so fault masks can be evaluated for ANY round
+in ANY order. That is what lets the scan engines precompute a chunk's
+fault masks as stacked ``(R, C)`` host arrays (bit-identical to the eager
+path's per-round draws by construction) and what makes checkpoint/resume
+trivial: there is no fault-RNG state to serialize, the round counter IS
+the state.
+
+  - availability traces: a seeded per-client diurnal phase plus
+    crash-and-rejoin churn epochs (a crashed client stays dark for
+    ``rejoin_after`` rounds). These SUPERSEDE the Bernoulli participation
+    flip: sampling still draws the same stream, availability then zeros
+    the unavailable rows.
+  - mid-round dropouts: a selected client crashes BEFORE upload — its
+    Eq. (1) time still burns the round wall-clock / deadline budget, but
+    nothing of it is aggregated.
+  - corrupted uploads: a seeded subset of clients per round (per upload
+    SEQUENCE for the async runtime, so the heap scheduler and the
+    window materializer agree) whose uploads are poisoned on device.
+
+DEVICE side (jax, traced identically by the eager dispatches and the
+scan bodies). Corruption injects NaN / Inf / exponent bit-flips into a
+``corrupt_frac`` subset of each victim's upload elements (element masks
+drawn from a ``fold_in``-derived PRNG keyed by a per-upload integer
+``uid``, so eager and scan runs poison the same bits). The defenses ride
+the aggregation's exact-zero-mask machinery:
+
+  - finite guard: per-element ``jnp.isfinite`` 0/1 masks quarantine
+    non-finite coordinates — the poisoned elements are zeroed in the
+    numerator and their per-coordinate COVERAGE is removed from the
+    denominator (the structured fleets' dense-denominator form,
+    ``aggregation.scatter_accumulate(cov=...)``). The masks are strictly
+    0/1, so they multiply under the same FMA-exact annihilation
+    invariant PRs 6–8 pinned: quarantining preserves eager↔scan
+    bit-identity.
+  - update-norm clipping: per-client global-L2 clip of the (already
+    guarded) upload, bounding the huge-but-finite values exponent
+    bit-flips produce.
+
+Clean scenarios (``faults=None``) never enter any code path in this
+module — their trajectories stay bit-identical to the pre-fault head.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FaultPolicy", "availability_mask", "dropout_mask", "corrupt_mask",
+    "corrupt_seq_mask", "inject_corruption", "finite_guard",
+    "clip_updates",
+]
+
+# rng stream tags: one disjoint ``default_rng([seed, TAG, ...])`` family
+# per fault axis, so axes never share draws
+_TAG_PHASE = 11       # per-client diurnal phase (drawn once, no round)
+_TAG_CHURN = 12       # per-round crash draws
+_TAG_DROP = 13        # per-round mid-round dropout draws
+_TAG_CORRUPT = 14     # per-round (sync) corruption draws
+_TAG_CORRUPT_SEQ = 15  # per-upload-seq (async) corruption draws
+
+CORRUPT_KINDS = ("nan", "inf", "bitflip")
+
+
+@dataclass(frozen=True)
+class FaultPolicy:
+    """What goes wrong, and what the server does about it.
+
+    Attack axes (all off by default; every draw is seeded by ``seed``):
+
+    - ``period``/``duty_cycle``: diurnal availability — client ``c`` is
+      up for ``ceil(duty_cycle * period)`` of every ``period`` rounds,
+      at a seeded per-client phase. ``period=0`` disables the trace.
+    - ``churn_rate``/``rejoin_after``: crash-and-rejoin epochs — each
+      round a client crashes with probability ``churn_rate`` and stays
+      dark for ``rejoin_after`` rounds before rejoining.
+    - ``dropout_rate``: a selected client crashes before upload; its
+      Eq. (1) time still burns the round wall-clock (and the deadline
+      budget under ``SyncDrop``). On the async virtual clock the same
+      rate drops UPLOADS instead: a dropped upload retries at
+      ``t + retry_backoff · 2^attempt`` (``max_retries`` retries, the
+      final attempt always lands — delays, never losses, so the
+      one-in-flight-upload-per-client scheduler invariant holds).
+    - ``corrupt_rate``/``corrupt_kind``/``corrupt_frac``: each upload is
+      poisoned with probability ``corrupt_rate``; within a poisoned
+      upload a seeded ``corrupt_frac`` fraction of elements becomes NaN
+      (``"nan"``), +Inf (``"inf"``), or has its top exponent bit
+      flipped (``"bitflip"`` — a mix of non-finite and huge-but-finite
+      values, which is what makes clipping worth having).
+
+    Defense knobs:
+
+    - ``finite_guard``: quarantine non-finite upload coordinates via
+      per-element ``isfinite`` 0/1 masks (numerator zeroed, coverage
+      removed from the denominator). On by default; active whenever the
+      per-client upload path runs (``corrupt_rate > 0`` or ``clip_norm``
+      set).
+    - ``clip_norm``: per-client global-L2 norm clip of the upload.
+    """
+    seed: int = 0
+    # availability trace
+    period: int = 0
+    duty_cycle: float = 1.0
+    # crash-and-rejoin churn
+    churn_rate: float = 0.0
+    rejoin_after: int = 1
+    # mid-round dropout (sync) / upload drop with retry (async)
+    dropout_rate: float = 0.0
+    retry_backoff: float = 0.0
+    max_retries: int = 3
+    # corrupted uploads
+    corrupt_rate: float = 0.0
+    corrupt_kind: str = "nan"
+    corrupt_frac: float = 1.0
+    # defenses
+    finite_guard: bool = True
+    clip_norm: float | None = None
+
+    def __post_init__(self):
+        if self.period < 0:
+            raise ValueError("period must be >= 0 rounds (0 = no trace)")
+        if not 0.0 < self.duty_cycle <= 1.0:
+            raise ValueError(f"duty_cycle must be in (0, 1], got {self.duty_cycle}")
+        if not 0.0 <= self.churn_rate < 1.0:
+            raise ValueError(f"churn_rate must be in [0, 1), got {self.churn_rate}")
+        if self.rejoin_after < 1:
+            raise ValueError("rejoin_after must be >= 1 rounds")
+        if not 0.0 <= self.dropout_rate < 1.0:
+            raise ValueError(f"dropout_rate must be in [0, 1), got {self.dropout_rate}")
+        if self.retry_backoff < 0.0:
+            raise ValueError("retry_backoff must be >= 0 seconds")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if not 0.0 <= self.corrupt_rate <= 1.0:
+            raise ValueError(f"corrupt_rate must be in [0, 1], got {self.corrupt_rate}")
+        if self.corrupt_kind not in CORRUPT_KINDS:
+            raise ValueError(f"corrupt_kind must be one of {CORRUPT_KINDS}, "
+                             f"got {self.corrupt_kind!r}")
+        if not 0.0 < self.corrupt_frac <= 1.0:
+            raise ValueError(f"corrupt_frac must be in (0, 1], got {self.corrupt_frac}")
+        if self.clip_norm is not None and self.clip_norm <= 0.0:
+            raise ValueError("clip_norm must be > 0")
+
+    @property
+    def traces_availability(self) -> bool:
+        """True when the policy carries a round-indexed availability
+        trace (diurnal schedule or churn) — sync-only, the async virtual
+        clock has no round index."""
+        return self.period > 0 or self.churn_rate > 0.0
+
+    @property
+    def touches_uploads(self) -> bool:
+        """True when uploads must flow through the per-client fault path
+        (injection and/or defenses) instead of the plain cohort step."""
+        return self.corrupt_rate > 0.0 or self.clip_norm is not None
+
+    def to_dict(self) -> dict:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultPolicy":
+        return cls(**d)
+
+
+# ------------------------------------------------------------------ host
+
+def availability_mask(policy: FaultPolicy, n_clients: int,
+                      step: int) -> np.ndarray:
+    """(n_clients,) bool, True = client is up in round ``step``.
+
+    Diurnal trace: client ``c`` is up iff
+    ``(step + phase[c]) % period < ceil(duty_cycle * period)`` with a
+    seeded per-client phase. Churn: a client is dark iff it crashed in
+    any of the last ``rejoin_after`` rounds (per-round Bernoulli
+    ``churn_rate`` draws, one rng per round — stateless, replayable for
+    any round in any order)."""
+    up = np.ones(n_clients, bool)
+    if policy.period > 0:
+        phase = np.random.default_rng(
+            [policy.seed, _TAG_PHASE]).integers(0, policy.period, n_clients)
+        on = int(np.ceil(policy.duty_cycle * policy.period))
+        up &= (step + phase) % policy.period < on
+    if policy.churn_rate > 0.0:
+        for r in range(max(0, step - policy.rejoin_after + 1), step + 1):
+            crash = np.random.default_rng(
+                [policy.seed, _TAG_CHURN, r]).random(n_clients)
+            up &= crash >= policy.churn_rate
+    return up
+
+
+def dropout_mask(policy: FaultPolicy, n_clients: int,
+                 step: int) -> np.ndarray:
+    """(n_clients,) bool, True = the client crashes before upload in
+    round ``step`` (applies to clients that are sampled AND available)."""
+    if policy.dropout_rate <= 0.0:
+        return np.zeros(n_clients, bool)
+    draw = np.random.default_rng(
+        [policy.seed, _TAG_DROP, step]).random(n_clients)
+    return draw < policy.dropout_rate
+
+
+def corrupt_mask(policy: FaultPolicy, n_clients: int,
+                 step: int) -> np.ndarray:
+    """(n_clients,) bool, True = the client's round-``step`` upload is
+    poisoned (sync runtimes: one draw per (round, client))."""
+    if policy.corrupt_rate <= 0.0:
+        return np.zeros(n_clients, bool)
+    draw = np.random.default_rng(
+        [policy.seed, _TAG_CORRUPT, step]).random(n_clients)
+    return draw < policy.corrupt_rate
+
+
+def corrupt_seq_mask(policy: FaultPolicy, seqs) -> np.ndarray:
+    """Per-upload corruption flags for the async runtime, keyed by the
+    scheduler's dispatch SEQUENCE numbers — a per-upload pure function,
+    so the eager heap path and the window materializer poison the same
+    uploads regardless of event interleaving."""
+    seqs = np.asarray(seqs)
+    if policy.corrupt_rate <= 0.0:
+        return np.zeros(seqs.shape, bool)
+    out = np.empty(seqs.shape, bool)
+    flat = out.reshape(-1)
+    for i, s in enumerate(seqs.reshape(-1)):
+        flat[i] = (np.random.default_rng(
+            [policy.seed, _TAG_CORRUPT_SEQ, int(s)]).random()
+            < policy.corrupt_rate)
+    return out
+
+
+# ---------------------------------------------------------------- device
+
+def _bad_values(x, kind: str, key):
+    """A leaf's worth of poison. ``bitflip`` flips the top exponent bit
+    of each f32 element — values with exponent >= 127 become Inf/NaN bit
+    patterns, smaller ones become huge-but-finite (2^64×), which is the
+    case update-norm clipping exists for. Non-f32 leaves fall back to
+    +Inf (always caught by the finite guard)."""
+    del key
+    if kind == "nan":
+        return jnp.full(x.shape, jnp.nan, x.dtype)
+    if kind == "bitflip" and x.dtype == jnp.float32:
+        bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        return jax.lax.bitcast_convert_type(
+            bits ^ jnp.uint32(1 << 30), jnp.float32)
+    return jnp.full(x.shape, jnp.inf, x.dtype)
+
+
+def inject_corruption(updates, corrupt, uid, policy: FaultPolicy):
+    """Poison the flagged rows of per-client stacked uploads.
+
+    ``updates``: pytree of ``(C, ...)`` leaves; ``corrupt``: ``(C,)``
+    f32 0/1 row flags; ``uid``: ``(C,)`` int32 per-upload identifiers
+    (``step * n_clients + flat_client`` for the sync runtimes, the
+    scheduler's dispatch sequence number for async) — the element-subset
+    PRNG is keyed by ``(policy.seed, uid, leaf index)``, so any two runs
+    that agree on uids poison bit-identical elements."""
+    base = jax.random.PRNGKey(policy.seed)
+    leaves, treedef = jax.tree_util.tree_flatten(updates)
+    out = []
+    for li, u in enumerate(leaves):
+        def row(i, c, x, _li=li):
+            bad = _bad_values(x, policy.corrupt_kind, None)
+            hit = c > 0
+            if policy.corrupt_frac < 1.0:
+                k = jax.random.fold_in(jax.random.fold_in(base, i), _li)
+                sel = jax.random.uniform(k, x.shape) < policy.corrupt_frac
+                return jnp.where(hit & sel, bad, x)
+            return jnp.where(hit, bad, x)
+        out.append(jax.vmap(row)(uid, corrupt, u))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def finite_guard(updates):
+    """Quarantine non-finite coordinates: returns ``(zeroed, cov)`` where
+    ``zeroed`` replaces every non-finite element with exact 0 and ``cov``
+    is the per-element 0/1 finite-coverage mask (same tree, f32). The
+    masks are strictly 0/1, so downstream multiplies stay FMA-exact —
+    the aggregation's association invariant (DESIGN.md §14) survives."""
+    fin = jax.tree.map(jnp.isfinite, updates)
+    zeroed = jax.tree.map(
+        lambda x, f: jnp.where(f, x, jnp.zeros((), x.dtype)), updates, fin)
+    cov = jax.tree.map(lambda f: f.astype(jnp.float32), fin)
+    return zeroed, cov
+
+
+def clip_updates(updates, clip_norm: float):
+    """Per-client global-L2 norm clip of stacked ``(C, ...)`` uploads:
+    ``u * min(1, clip / ||u||)``, computed as ``clip / max(||u||, clip)``
+    so an all-zero (fully quarantined) row stays exactly zero."""
+    sq = None
+    for x in jax.tree.leaves(updates):
+        s = jnp.sum(jnp.square(x), axis=tuple(range(1, x.ndim)))
+        sq = s if sq is None else sq + s
+    norm = jnp.sqrt(sq)
+    scale = jnp.float32(clip_norm) / jnp.maximum(norm, jnp.float32(clip_norm))
+    return jax.tree.map(
+        lambda x: x * scale.reshape((-1,) + (1,) * (x.ndim - 1)), updates)

@@ -57,9 +57,12 @@ from repro.core.aggregation import (finalize, hetero_aggregate,
 from repro.core.compression import (CompressionPlan, compress_params,
                                     expand_update, slice_tree, submodel_spec)
 from repro.core.compression.quantization import fake_quant_ste
+from repro.core.faults import (FaultPolicy, availability_mask, clip_updates,
+                               corrupt_mask, corrupt_seq_mask, dropout_mask,
+                               finite_guard, inject_corruption)
 from repro.core.heterogeneity import (PROFILES, cohort_round_time,
                                       round_time)
-from repro.core.schedule import VirtualClockScheduler
+from repro.core.schedule import RetrySpec, VirtualClockScheduler
 from repro.core.topology import (EdgeCohort, build_edge_cohorts,
                                  scatter_part)
 from repro.data.federated import stack_shards
@@ -163,6 +166,7 @@ class FLServer:
     server_lr: float = 1.0          # fedavg delta scale
     upload_quant: str | None = None # e.g. "fp8_e4m3" (beyond-paper)
     error_feedback: bool = False
+    faults: FaultPolicy | None = None   # DESIGN.md §17
     step: int = 0
     history: list = field(default_factory=list)
 
@@ -178,12 +182,40 @@ class FLServer:
         ONE ``jax.device_get`` per round — the former per-client
         ``float(loss)`` forced a device→host sync inside the loop,
         serializing every dispatch behind the previous client's compute.
+
+        With a :class:`FaultPolicy`: unavailable clients never start (no
+        time burned); mid-round dropouts burn their Eq. (1) time into the
+        round wall-clock but upload nothing; corrupted uploads are
+        poisoned in transit and (finite guard on) quarantined by folding
+        the per-element finite mask into the client's aggregation mask —
+        `hetero_aggregate`'s per-coordinate renormalization then treats a
+        poisoned coordinate exactly like one pruned on that tier.
         """
         loss_fn = self.model.loss_fn
+        flt = self.faults
+        n = len(self.clients)
+        avail = (availability_mask(flt, n, self.step)
+                 if flt is not None else None)
+        drops = dropout_mask(flt, n, self.step) if flt is not None else None
+        corr = corrupt_mask(flt, n, self.step) if flt is not None else None
         grads_list, masks_list, weights = [], [], []
-        losses, comm = [], []
-        for c, batch in zip(self.clients,
-                            client_batches or [c.data for c in self.clients]):
+        losses = []
+        n_dropouts = n_corrupt = 0
+        wall, upload_bytes = 0.0, 0.0
+        for i, (c, batch) in enumerate(
+                zip(self.clients,
+                    client_batches or [c.data for c in self.clients])):
+            if avail is not None and not avail[i]:
+                continue                     # down: never dispatched
+            n_batch = next(iter(batch.values())).shape[0]
+            comm = round_time(self.params, c.plan,
+                              PROFILES[c.profile_name], n_batch,
+                              self.local_steps if self.mode == "fedavg" else 1)
+            wall = max(wall, comm["T"])      # stragglers (incl. dropouts)
+            if drops is not None and drops[i]:
+                n_dropouts += 1              # crashed before upload: the
+                continue                     # time burned, nothing arrives
+            upload_bytes += comm["payload_bytes"]
             if self.mode == "fedsgd":
                 loss, g, masks = _client_grad_fn(loss_fn, c.plan)(self.params, batch)
             else:
@@ -195,24 +227,43 @@ class FLServer:
                 c.ef_buffer if self.error_feedback else None, self.params)
             if self.error_feedback:
                 c.ef_buffer = new_ef
+            if flt is not None and flt.touches_uploads:
+                # single-row stack through the shared device-side fault
+                # pipeline (same transit order as the cohort fault step)
+                g1 = jax.tree.map(lambda x: x[None], g)
+                if flt.corrupt_rate > 0.0:
+                    hit = bool(corr[i])
+                    n_corrupt += int(hit)
+                    g1 = inject_corruption(
+                        g1, jnp.asarray([float(hit)], jnp.float32),
+                        jnp.asarray([self.step * n + i], jnp.int32), flt)
+                if flt.finite_guard:
+                    g1, fin1 = finite_guard(g1)
+                    masks = jax.tree.map(
+                        lambda m, f: m * f[0], masks, fin1)
+                if flt.clip_norm is not None:
+                    g1 = clip_updates(g1, flt.clip_norm)
+                g = jax.tree.map(lambda x: x[0], g1)
             grads_list.append(g)
             masks_list.append(masks)
             weights.append(c.plan.weight)
-            losses.append(loss)                  # traced; synced once below
-            n_batch = next(iter(batch.values())).shape[0]
-            comm.append(round_time(self.params, c.plan,
-                                   PROFILES[c.profile_name], n_batch,
-                                   self.local_steps if self.mode == "fedavg" else 1))
+            losses.append(loss)              # traced; synced once below
 
-        agg = hetero_aggregate(grads_list, masks_list, weights)
-        _apply_update(self, agg, self.step)
+        if grads_list:
+            agg = hetero_aggregate(grads_list, masks_list, weights)
+            _apply_update(self, agg, self.step)
         self.step += 1
         # the round's single device->host sync (history schema unchanged)
         losses = [float(x) for x in jax.device_get(losses)]
-        rec = {"step": self.step, "loss": sum(losses) / len(losses),
+        rec = {"step": self.step,
+               "loss": sum(losses) / len(losses) if losses else None,
                "client_losses": losses,
-               "round_wall_time": max(c["T"] for c in comm),   # stragglers
-               "total_upload_bytes": sum(c["payload_bytes"] for c in comm)}
+               "n_participants": len(losses),
+               "round_wall_time": wall,
+               "total_upload_bytes": upload_bytes}
+        if flt is not None:
+            rec["n_dropouts"] = n_dropouts
+            rec["n_corrupt"] = n_corrupt
         self.history.append(rec)
         return rec
 
@@ -304,10 +355,12 @@ def _memo_submodel_spec(cache: dict, ci: int, params, plan: CompressionPlan):
     return spec
 
 
-def _upload_and_sum(updates, part, ef, fmt: str | None):
-    """Participation-masked upload of per-client updates ``(C, ...)``:
-    optional quantization with stacked error feedback, then the weighted
-    sum over the client axis. Non-participants' residuals are preserved."""
+def _quantize_clients(updates, part, ef, fmt: str | None):
+    """Client-side upload quantization of per-client updates ``(C, ...)``
+    with stacked error feedback; non-participants' residuals are
+    preserved. Kept separate from the participation sum so the fault path
+    can corrupt uploads IN TRANSIT — after the device quantized and
+    banked its residual, before the server sums (DESIGN.md §17)."""
     if fmt is not None:
         f = FORMATS[fmt]
         corrected = jax.tree.map(lambda u, e: u + e, updates, ef)
@@ -322,6 +375,14 @@ def _upload_and_sum(updates, part, ef, fmt: str | None):
 
         ef = jax.tree.map(upd_ef, ef, corrected, q)
         updates = q
+    return updates, ef
+
+
+def _upload_and_sum(updates, part, ef, fmt: str | None):
+    """Participation-masked upload of per-client updates ``(C, ...)``:
+    optional quantization with stacked error feedback, then the weighted
+    sum over the client axis. Non-participants' residuals are preserved."""
+    updates, ef = _quantize_clients(updates, part, ef, fmt)
     u_sum = jax.tree.map(lambda u: jnp.tensordot(part, u, axes=1), updates)
     return u_sum, ef
 
@@ -420,6 +481,89 @@ def _cohort_step_jit(loss_fn: Callable, plan: CompressionPlan, mode: str,
                                   local_lr, upload_fmt))
 
 
+def fault_cohort_step_fn(loss_fn: Callable, plan: CompressionPlan, mode: str,
+                         local_steps: int, local_lr: float,
+                         upload_fmt: str | None,
+                         faults: FaultPolicy) -> Callable:
+    """The fault-path twin of :func:`cohort_step_fn` (DESIGN.md §17):
+    ``(params, batches, part, ef, corrupt, uid) ->
+    (update_sum, masks, cov, loss_sum, ef)``.
+
+    Engaged only when ``faults.touches_uploads`` — corruption and the
+    defenses act on INDIVIDUAL uploads, so this always runs the vmapped
+    per-client branches (fedsgd's grad-of-weighted-sum fast path never
+    materializes per-client gradients; clean scenarios keep it). The
+    per-upload pipeline, in transit order:
+
+      local step -> quantize + bank EF residual (client side, so EF is
+      computed from the TRUE update — corruption happens on the wire) ->
+      inject corruption into rows flagged by ``corrupt`` (element subset
+      keyed by ``uid``) -> finite-guard quarantine (zero non-finite
+      elements, collect 0/1 coverage) -> per-client norm clip ->
+      participation-weighted sum.
+
+    ``cov`` is the participation-weighted coverage sum (the
+    per-coordinate denominator for ``scatter_accumulate(cov=...)``), or
+    ``None`` when the finite guard is off (the attack-without-defense
+    configuration — NaN then reaches the global params, which is the
+    point). Shared verbatim by the eager dispatches and both scan
+    engines, same bit-identity contract as :func:`cohort_step_fn`.
+    """
+    inner = plan.inner()
+
+    def _base(params):
+        if not plan.structured:
+            return params
+        return slice_tree(params, submodel_spec(params, plan.width))
+
+    if mode == "fedsgd":
+        def updates_of(params, batches):
+            p0 = _base(params)
+
+            def per_client(batch):
+                def loss_of(p):
+                    cp, _ = compress_params(p, inner)
+                    return loss_fn(cp, batch)
+                return jax.value_and_grad(loss_of)(p0)
+
+            losses, ups = jax.vmap(per_client)(batches)
+            _, masks = compress_params(p0, inner)
+            return losses, ups, masks
+    else:
+        local = _local_sgd(loss_fn, plan, local_steps, local_lr)
+
+        def updates_of(params, batches):
+            cp0, masks = compress_params(_base(params), inner)
+            losses, ups = jax.vmap(lambda batch: local(cp0, batch))(batches)
+            return losses, ups, masks
+
+    def f(params, batches, part, ef, corrupt, uid):
+        losses, ups, masks = updates_of(params, batches)
+        ups, ef = _quantize_clients(ups, part, ef, upload_fmt)
+        if faults.corrupt_rate > 0.0:
+            ups = inject_corruption(ups, corrupt, uid, faults)
+        cov = None
+        if faults.finite_guard:
+            ups, fin = finite_guard(ups)
+            cov = jax.tree.map(
+                lambda m: jnp.tensordot(part, m, axes=1), fin)
+        if faults.clip_norm is not None:
+            ups = clip_updates(ups, faults.clip_norm)
+        u_sum = jax.tree.map(lambda u: jnp.tensordot(part, u, axes=1), ups)
+        return u_sum, masks, cov, jnp.sum(part * losses), ef
+    return f
+
+
+@functools.lru_cache(maxsize=64)
+def _fault_cohort_step_jit(loss_fn: Callable, plan: CompressionPlan,
+                           mode: str, local_steps: int, local_lr: float,
+                           upload_fmt: str | None, faults: FaultPolicy):
+    """Jitted-and-cached :func:`fault_cohort_step_fn` (FaultPolicy is
+    frozen/hashable, so it keys the cache like the plan does)."""
+    return jax.jit(fault_cohort_step_fn(loss_fn, plan, mode, local_steps,
+                                        local_lr, upload_fmt, faults))
+
+
 @functools.lru_cache(maxsize=64)
 def _apply_fns(optimizer, mode: str, server_lr: float):
     """``(jitted, raw)`` server-side model update
@@ -470,6 +614,40 @@ def _cohort_upload(server, cohort: Cohort, batches, part, params):
     if server.upload_quant is not None and server.error_feedback:
         cohort.ef_buffer = new_ef
     return g_sum, masks, l_sum
+
+
+def _fault_cohort_upload(server, cohort: Cohort, batches, part, params,
+                         corrupt, uid):
+    """:func:`_cohort_upload`'s fault-path twin: dispatches the cached
+    :func:`fault_cohort_step_fn` with the round's per-row corruption
+    flags and per-upload uids. Returns ``(grad_sum, masks, cov,
+    loss_sum)`` — ``cov`` is the per-coordinate coverage denominator
+    (None when the finite guard is off)."""
+    ef = cohort.ef_buffer
+    if server.upload_quant is not None and ef is None:
+        ef = _init_cohort_ef(cohort.size,
+                             _local_param_struct(params, cohort.plan))
+    elif server.upload_quant is None:
+        ef = ()                     # leafless placeholder pytree
+    fn = _fault_cohort_step_jit(server.model.loss_fn, cohort.plan,
+                                server.mode, server.local_steps,
+                                server.local_lr, server.upload_quant,
+                                server.faults)
+    g_sum, masks, cov, l_sum, new_ef = fn(
+        params, batches, jnp.asarray(part, jnp.float32), ef,
+        jnp.asarray(corrupt, jnp.float32), jnp.asarray(uid, jnp.int32))
+    if server.upload_quant is not None and server.error_feedback:
+        cohort.ef_buffer = new_ef
+    return g_sum, masks, cov, l_sum
+
+
+def _guard_cov_active(faults: FaultPolicy | None) -> bool:
+    """True when the fault path emits per-coordinate coverage trees —
+    the aggregation accumulators then need dense denominators
+    (``zeros_like_acc(dense_den=True)``), in the eager rounds and the
+    scan engines alike."""
+    return (faults is not None and faults.touches_uploads
+            and faults.finite_guard)
 
 
 @functools.lru_cache(maxsize=64)
@@ -554,6 +732,7 @@ class CohortFLServer:
     sample_fraction: float = 1.0    # partial participation
     straggler: str = "wait"         # wait | drop
     deadline: float | None = None   # seconds, required for straggler="drop"
+    faults: FaultPolicy | None = None   # DESIGN.md §17
     seed: int = 0
     step: int = 0
     # hierarchical fleets (DESIGN.md §16): the FleetTopology the cohorts
@@ -581,6 +760,12 @@ class CohortFLServer:
             raise ValueError(f"straggler must be wait|drop, got {self.straggler!r}")
         if self.straggler == "drop" and self.deadline is None:
             raise ValueError("straggler='drop' requires a deadline (seconds)")
+        if (self.faults is not None and self.faults.touches_uploads
+                and self.topology is not None):
+            raise ValueError(
+                "upload corruption/defenses are not modeled for hierarchical "
+                "fleets (quarantine would happen at the edge gateways — "
+                "DESIGN.md §17); availability/churn/dropout faults are fine")
 
     @classmethod
     def from_clients(cls, clients: list[Client], topology=None,
@@ -643,31 +828,64 @@ class CohortFLServer:
         ``cohort_batches`` (optional) overrides each cohort's stacked full
         local data; ``participation`` (optional, one bool array per
         cohort) overrides the sampled participation — tests use it to pin
-        scenarios. Deadline dropping still applies on top of either.
+        scenarios. Deadline dropping, and any :class:`FaultPolicy`
+        availability/dropout/corruption, still apply on top of either.
+
+        Fault semantics (DESIGN.md §17), applied per cohort in flat
+        scheduler-index order: availability zeros sampled rows FIRST (a
+        down client was never dispatched — no time, no bytes); deadline
+        dropping applies among the available; mid-round dropouts then
+        crash clients that DID run — their Eq. (1) time burns the round
+        wall-clock, but nothing of them is uploaded, counted or billed.
+        Corrupted uploads flow through :func:`fault_cohort_step_fn`'s
+        inject→guard→clip pipeline and aggregate with per-coordinate
+        coverage denominators. A round in which every sampled client went
+        dark or crashed is a graceful no-op: params untouched, ``loss``
+        recorded as ``None`` (never NaN), ``n_participants`` 0.
         """
         rng = np.random.default_rng([self.seed, self.step])
         sampled = (self._sample_participation(rng) if participation is None
                    else [np.asarray(p, bool) for p in participation])
-        acc = zeros_like_acc(self.params, dense_den=self.any_structured)
+        flt = self.faults
+        if flt is not None:
+            n_total = self.n_clients
+            avail = availability_mask(flt, n_total, self.step)
+            drops = dropout_mask(flt, n_total, self.step)
+            corr = corrupt_mask(flt, n_total, self.step)
+        acc = zeros_like_acc(self.params,
+                             dense_den=(self.any_structured
+                                        or _guard_cov_active(flt)))
         loss_sum = jnp.float32(0.0)
         n_part_total, n_dropped = 0, 0
+        n_dropouts, n_corrupt = 0, 0
         wall, upload_bytes = 0.0, 0.0
+        off = 0
         for ci, (cohort, part) in enumerate(zip(self.cohorts, sampled)):
+            off0, off = off, off + cohort.size
             batches = (cohort.data if cohort_batches is None
                        else cohort_batches[ci])
             grid = isinstance(cohort, EdgeCohort)
             n_batch = next(iter(batches.values())).shape[2 if grid else 1]
             times = self.cohort_times(ci, n_batch)
             part = part.copy()
+            if flt is not None:
+                part &= avail[off0:off]
             if self.straggler == "drop":
                 late = times["T"] > self.deadline
                 n_dropped += int(np.sum(part & late))
                 part &= ~late
-            n_p = int(part.sum())
+            active = part
+            if flt is not None and flt.dropout_rate > 0.0:
+                crashed = part & drops[off0:off]
+                n_dropouts += int(crashed.sum())
+                active = part & ~crashed
+            if part.any():
+                # ran clients burn wall-clock whether or not they crashed
+                wall = max(wall, float(times["T"][part].max()))
+            n_p = int(active.sum())
             if n_p == 0:
                 continue
-            wall = max(wall, float(times["T"][part].max()))
-            upload_bytes += float(times["payload_bytes"][part].sum())
+            upload_bytes += float(times["payload_bytes"][active].sum())
             n_part_total += n_p
 
             if grid:
@@ -676,8 +894,8 @@ class CohortFLServer:
                 # edge forwards its partial (update_sum, masks, loss)
                 # and the chain below is the ONLY cross-edge arithmetic
                 g_sums, masks, l_sums = _edge_cohort_upload(
-                    self, cohort, batches, part, self.params)
-                counts = np.bincount(cohort.edge_index[part],
+                    self, cohort, batches, active, self.params)
+                counts = np.bincount(cohort.edge_index[active],
                                      minlength=cohort.n_edges)
                 spec = self.cohort_spec(ci)
                 w = jnp.float32(cohort.plan.weight)
@@ -689,12 +907,20 @@ class CohortFLServer:
                     loss_sum = loss_sum + l_sums[e]
                 continue
 
-            g_sum, masks, l_sum = _cohort_upload(self, cohort, batches,
-                                                 part, self.params)
+            if flt is not None and flt.touches_uploads:
+                c_row = corr[off0:off] & active
+                n_corrupt += int(c_row.sum())
+                uid = self.step * n_total + np.arange(off0, off)
+                g_sum, masks, cov, l_sum = _fault_cohort_upload(
+                    self, cohort, batches, active, self.params, c_row, uid)
+            else:
+                cov = None
+                g_sum, masks, l_sum = _cohort_upload(self, cohort, batches,
+                                                     active, self.params)
             acc = scatter_accumulate(acc, g_sum, masks,
                                      self.cohort_spec(ci),
                                      jnp.float32(cohort.plan.weight),
-                                     jnp.float32(n_p))
+                                     jnp.float32(n_p), cov=cov)
             loss_sum = loss_sum + l_sum
 
         if n_part_total:
@@ -702,13 +928,16 @@ class CohortFLServer:
         self.step += 1
         # the round's single device->host sync:
         mean_loss = (float(jax.device_get(loss_sum)) / n_part_total
-                     if n_part_total else float("nan"))
+                     if n_part_total else None)
         rec = {"step": self.step, "loss": mean_loss,
                "n_participants": n_part_total, "n_dropped": n_dropped,
                "round_wall_time": (self.deadline
                                    if self.straggler == "drop" and n_dropped
                                    else wall),
                "total_upload_bytes": upload_bytes}
+        if flt is not None:
+            rec["n_dropouts"] = n_dropouts
+            rec["n_corrupt"] = n_corrupt
         self.history.append(rec)
         return rec
 
@@ -778,6 +1007,7 @@ class AsyncFLServer:
     buffer_size: int = 1            # uploads per aggregation (K of FedBuff)
     staleness_exp: float = 0.5      # a in (1+s)^-a; 0 turns the discount off
     time_jitter: float = 0.0        # lognormal sigma on per-dispatch times
+    faults: FaultPolicy | None = None   # DESIGN.md §17
     seed: int = 0
     # global model version (= windows applied); starts at 0 with the
     # scheduler's clock, so it is state, not a constructor knob
@@ -791,6 +1021,11 @@ class AsyncFLServer:
             raise ValueError(f"mode must be fedsgd|fedavg, got {self.mode!r}")
         if self.staleness_exp < 0:
             raise ValueError("staleness_exp must be >= 0")
+        if self.faults is not None and self.faults.traces_availability:
+            raise ValueError(
+                "availability traces (period/churn) are round-indexed — "
+                "the async virtual clock has no round index; model async "
+                "flakiness as dropout_rate + retry_backoff instead")
         # per-cohort width-slice specs (structured plans; shapes static)
         self._spec_cache: dict = {}
         # flatten the fleet into scheduler slots: client index -> cohort row
@@ -807,8 +1042,19 @@ class AsyncFLServer:
                 times.append(float(t["T"][r]))
                 payload.append(float(t["payload_bytes"][r]))
         self._payload_bytes = payload
+        retry = None
+        if self.faults is not None and self.faults.dropout_rate > 0.0:
+            # upload losses become deterministic retransmission DELAYS
+            # (schedule.RetrySpec) — the one-in-flight invariant holds,
+            # so the heap and the window materializer stay element-wise
+            # identical under faults too
+            retry = RetrySpec(drop_rate=self.faults.dropout_rate,
+                              backoff=self.faults.retry_backoff,
+                              max_retries=self.faults.max_retries,
+                              seed=self.faults.seed)
         self._sched = VirtualClockScheduler(
-            times, self.buffer_size, seed=self.seed, jitter=self.time_jitter)
+            times, self.buffer_size, seed=self.seed, jitter=self.time_jitter,
+            retry=retry)
         # version store: every global version an in-flight client trains
         # against, refcounted by outstanding dispatches
         self._versions = {self.version: self.params}
@@ -843,7 +1089,22 @@ class AsyncFLServer:
                                [u.client for u in win.uploads],
                                [u.version for u in win.uploads])
 
-        acc = zeros_like_acc(self.params, dense_den=self.any_structured)
+        flt = self.faults
+        fault_uploads = flt is not None and flt.touches_uploads
+        seq_of, corr_of = {}, {}
+        n_corrupt = 0
+        if fault_uploads:
+            # corruption is keyed by the upload's dispatch SEQUENCE number
+            # (a pure per-upload function — the window-scan engine replays
+            # the same flags from the materialized plan's seq array)
+            flags = corrupt_seq_mask(flt, [u.seq for u in win.uploads])
+            for u, hit in zip(win.uploads, flags):
+                seq_of[self._slots[u.client]] = u.seq
+                corr_of[self._slots[u.client]] = bool(hit)
+
+        acc = zeros_like_acc(self.params,
+                             dense_den=(self.any_structured
+                                        or _guard_cov_active(flt)))
         loss_sum = jnp.float32(0.0)
         upload_bytes = sum(self._payload_bytes[u.client]
                            for u in win.uploads)
@@ -851,15 +1112,27 @@ class AsyncFLServer:
             cohort = self.cohorts[ci]
             part = np.zeros(cohort.size, bool)
             part[rows] = True
-            g_sum, masks, l_sum = _cohort_upload(self, cohort, cohort.data,
-                                                 part, self._versions[v])
+            if fault_uploads:
+                c_row = np.zeros(cohort.size, bool)
+                uid = np.zeros(cohort.size, np.int64)
+                for r in rows:
+                    c_row[r] = corr_of[(ci, r)]
+                    uid[r] = seq_of[(ci, r)]
+                n_corrupt += int(c_row.sum())
+                g_sum, masks, cov, l_sum = _fault_cohort_upload(
+                    self, cohort, cohort.data, part, self._versions[v],
+                    c_row, uid)
+            else:
+                cov = None
+                g_sum, masks, l_sum = _cohort_upload(
+                    self, cohort, cohort.data, part, self._versions[v])
             discount = (1.0 + (win.version - v)) ** (-self.staleness_exp)
             spec = _memo_submodel_spec(self._spec_cache, ci, self.params,
                                        cohort.plan)
             acc = scatter_accumulate(
                 acc, g_sum, masks, spec,
                 jnp.float32(cohort.plan.weight), jnp.float32(len(rows)),
-                staleness_weight=jnp.float32(discount))
+                staleness_weight=jnp.float32(discount), cov=cov)
             loss_sum = loss_sum + l_sum
 
         _apply_update(self, finalize(acc), win.version)
@@ -885,6 +1158,8 @@ class AsyncFLServer:
                "staleness_max": int(max(stale)),
                "n_versions_live": self.n_versions_live,
                "total_upload_bytes": upload_bytes}
+        if flt is not None:
+            rec["n_corrupt"] = n_corrupt
         self.history.append(rec)
         return rec
 

@@ -36,13 +36,14 @@ from dataclasses import dataclass
 from typing import Any, ClassVar
 
 from repro.core.compression import DEVICE_TIERS, active_param_count
+from repro.core.faults import FaultPolicy
 from repro.core.heterogeneity import PROFILES, round_time
 from repro.core.topology import FleetTopology, cross_shard_bytes
 from repro.numerics import FORMATS
 
 __all__ = [
     "FleetSpec", "LocalTraining", "UploadPolicy", "ParticipationPolicy",
-    "TimingPolicy", "SyncWait", "SyncDrop", "AsyncBuffered",
+    "TimingPolicy", "SyncWait", "SyncDrop", "AsyncBuffered", "FaultPolicy",
     "FLScenario", "RoundRecord", "RunResult",
     "build_server", "simulate", "scenario_census", "timing_from_dict",
 ]
@@ -248,7 +249,14 @@ class UploadPolicy:
 class ParticipationPolicy:
     """Who shows up: per-round uniform sampling without replacement.
     ``seed`` is the scenario's single stochastic seed — it also drives
-    the async runtime's dispatch-time jitter."""
+    the async runtime's dispatch-time jitter.
+
+    Any ``fraction > 0`` selects at least one client
+    (``max(1, round(fraction * n_clients))`` — pinned in
+    ``tests/test_faults.py``), so sampling alone never produces a
+    zero-participant round; only a :class:`~repro.core.faults.FaultPolicy`
+    (everyone dark/crashed) or a tight ``SyncDrop`` deadline can, and
+    those rounds are graceful no-ops (see :class:`RoundRecord`)."""
     fraction: float = 1.0
     seed: int = 0
 
@@ -334,6 +342,13 @@ class FLScenario:
     participation x timing, plus which execution substrate runs it
     (``"cohort"``: vmapped per-plan fast path; ``"client"``: the faithful
     per-client loop, instrumentation-friendly but O(#clients) dispatches).
+
+    ``faults`` (optional, DESIGN.md §17) layers a
+    :class:`~repro.core.faults.FaultPolicy` over the run — availability
+    traces, mid-round dropouts, corrupted uploads, and the server-side
+    defenses. ``None`` (the default) leaves every runtime on the exact
+    clean code path: trajectories are bit-identical to a fault-free
+    build.
     """
     fleet: FleetSpec
     local: LocalTraining = LocalTraining()
@@ -341,10 +356,25 @@ class FLScenario:
     participation: ParticipationPolicy = ParticipationPolicy()
     timing: TimingPolicy = SyncWait()
     runtime: str = "cohort"         # cohort | client
+    faults: FaultPolicy | None = None
 
     def __post_init__(self):
         if self.runtime not in ("cohort", "client"):
             raise ValueError(f"runtime must be cohort|client, got {self.runtime!r}")
+        if self.faults is not None:
+            if (isinstance(self.timing, AsyncBuffered)
+                    and self.faults.traces_availability):
+                raise ValueError(
+                    "availability traces (period/churn) are round-indexed — "
+                    "the async virtual clock has no round index; model "
+                    "async flakiness as dropout_rate + retry_backoff")
+            if (self.faults.touches_uploads
+                    and self.fleet.topology is not None):
+                raise ValueError(
+                    "upload corruption/defenses are not modeled for "
+                    "hierarchical fleets (quarantine would happen at the "
+                    "edge gateways — DESIGN.md §17); availability/churn/"
+                    "dropout faults are fine")
         if self.runtime == "client":
             if not isinstance(self.timing, SyncWait):
                 raise ValueError("the per-client runtime only supports "
@@ -368,22 +398,28 @@ class FLScenario:
                                  "are sync-only (DESIGN.md §16)")
 
     def to_dict(self) -> dict:
-        return {"fleet": self.fleet.to_dict(),
-                "local": self.local.to_dict(),
-                "upload": self.upload.to_dict(),
-                "participation": self.participation.to_dict(),
-                "timing": self.timing.to_dict(),
-                "runtime": self.runtime}
+        d = {"fleet": self.fleet.to_dict(),
+             "local": self.local.to_dict(),
+             "upload": self.upload.to_dict(),
+             "participation": self.participation.to_dict(),
+             "timing": self.timing.to_dict(),
+             "runtime": self.runtime}
+        if self.faults is not None:
+            d["faults"] = self.faults.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "FLScenario":
+        faults = d.get("faults")
         return cls(fleet=FleetSpec.from_dict(d["fleet"]),
                    local=LocalTraining.from_dict(d["local"]),
                    upload=UploadPolicy.from_dict(d["upload"]),
                    participation=ParticipationPolicy.from_dict(
                        d["participation"]),
                    timing=timing_from_dict(d["timing"]),
-                   runtime=d.get("runtime", "cohort"))
+                   runtime=d.get("runtime", "cohort"),
+                   faults=(None if faults is None
+                           else FaultPolicy.from_dict(faults)))
 
 
 # ------------------------------------------------------- typed records
@@ -392,19 +428,27 @@ class FLScenario:
 class RoundRecord:
     """One round (sync) or aggregation window (async), typed. Fields a
     runtime does not produce stay ``None`` — replaces the three divergent
-    untyped ``history`` dicts."""
+    untyped ``history`` dicts.
+
+    ``loss`` is ``None`` for a zero-participant round (every sampled
+    client dark, crashed, or deadline-dropped): the round is a graceful
+    no-op — params untouched, ``n_participants`` 0 — and downstream
+    consumers skip the record instead of averaging a NaN sentinel into
+    the trajectory."""
     step: int
-    loss: float
+    loss: float | None
     round_wall_time: float | None = None    # sync: Eq. (1) round wall-clock
     t: float | None = None                  # async: virtual-clock timestamp
     total_upload_bytes: float = 0.0
     n_participants: int | None = None
-    n_dropped: int | None = None
+    n_dropped: int | None = None            # by the SyncDrop deadline
     client_losses: tuple[float, ...] | None = None
     n_updates: int | None = None            # async: uploads in the window
     staleness_mean: float | None = None
     staleness_max: int | None = None
     n_versions_live: int | None = None
+    n_dropouts: int | None = None           # faults: mid-round crashes
+    n_corrupt: int | None = None            # faults: poisoned uploads
 
     @classmethod
     def from_history(cls, rec: dict) -> "RoundRecord":
@@ -481,7 +525,8 @@ def build_server(scenario: FLScenario, model, optimizer, params, *,
                   local_lr=scenario.local.local_lr,
                   server_lr=scenario.local.server_lr,
                   upload_quant=scenario.upload.quant,
-                  error_feedback=scenario.upload.error_feedback)
+                  error_feedback=scenario.upload.error_feedback,
+                  faults=scenario.faults)
     timing = scenario.timing
     if scenario.runtime == "client":
         return FLServer(clients=clients, **common)
@@ -533,7 +578,9 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
              optimizer=None, params=None, clients: list | None = None,
              shards: list | None = None, init_seed: int = 0,
              engine: str = "eager", chunk_rounds: int | None = None,
-             mesh=None) -> RunResult:
+             mesh=None, checkpoint_every: int | None = None,
+             checkpoint_dir: str | None = None,
+             resume_from: str | None = None) -> RunResult:
     """The unified driver: build the scenario's runtime and advance it
     ``rounds`` federated rounds (sync) or aggregation windows (async).
     With no model/optimizer/params it runs the paper's MLP task.
@@ -568,11 +615,30 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
     only, the trajectory stays bitwise identical to the unsharded run.
     Pass ``mesh=True`` for the default :func:`make_edge_mesh` over the
     available devices, or an explicit ``jax.sharding.Mesh``.
+
+    Durable runs (DESIGN.md §17): ``checkpoint_every=N`` serializes the
+    FULL server state (params, opt_state, EF buffers, async version
+    store + scheduler heap, history) into ``checkpoint_dir`` every N
+    rounds/windows of the TOTAL trajectory; ``resume_from=path`` restores
+    the latest checkpoint there and advances the REMAINING
+    ``rounds - restored_step`` rounds. Participation and fault draws are
+    stateless per round (``default_rng([seed, step])``), so the round
+    counter is the whole RNG state — a killed-and-resumed run reproduces
+    the uninterrupted trajectory BITWISE, in eager and scan engines
+    (pinned in ``tests/test_checkpoint.py``). ``resume_from`` doubles as
+    the save target when ``checkpoint_dir`` is not given.
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    ckpt_dir = checkpoint_dir if checkpoint_dir is not None else resume_from
+    if checkpoint_every is not None:
+        if checkpoint_every < 1:
+            raise ValueError("checkpoint_every must be >= 1 rounds")
+        if ckpt_dir is None:
+            raise ValueError("checkpoint_every needs checkpoint_dir "
+                             "(or resume_from) to write into")
     model, optimizer, params = _default_bundle(model, optimizer, params,
                                                init_seed)
     srv = build_server(scenario, model, optimizer, params,
@@ -580,6 +646,13 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
     if mesh is not None and mesh is not False:
         from repro.core.topology import shard_fleet
         shard_fleet(srv, None if mesh is True else mesh)
+    done = 0
+    if resume_from is not None:
+        from repro.checkpoint.state import restore_run_state
+        done = restore_run_state(srv, resume_from, scenario=scenario)
+        if done > rounds:
+            raise ValueError(
+                f"checkpoint at step {done} is past rounds={rounds}")
     agg_backend = "sequential"
     if engine != "eager" and scenario.runtime == "cohort":
         if isinstance(scenario.timing, AsyncBuffered):
@@ -591,12 +664,31 @@ def simulate(scenario: FLScenario, rounds: int, *, model=None,
                              agg="pallas" if engine == "scan_pallas"
                              else "sequential")
         agg_backend = eng.agg_backend
-        eng.run(rounds)
+        advance_many = eng.run
     else:
-        advance = (srv.step if isinstance(scenario.timing, AsyncBuffered)
-                   else srv.round)
-        for _ in range(rounds):
-            advance()
+        advance_one = (srv.step
+                       if isinstance(scenario.timing, AsyncBuffered)
+                       else srv.round)
+
+        def advance_many(k):
+            for _ in range(k):
+                advance_one()
+    if checkpoint_every is None:
+        if rounds > done:
+            advance_many(rounds - done)
+    else:
+        from repro.checkpoint.state import save_run_state
+        while done < rounds:
+            # advance to the next multiple of checkpoint_every (or the
+            # end of the trajectory), then snapshot — segment boundaries
+            # are absolute, so a resumed run saves at the same steps an
+            # uninterrupted one does
+            k = min(checkpoint_every - done % checkpoint_every,
+                    rounds - done)
+            advance_many(k)
+            done += k
+            if done % checkpoint_every == 0:
+                save_run_state(srv, ckpt_dir, scenario=scenario)
     return RunResult(scenario=scenario,
                      records=tuple(RoundRecord.from_history(h)
                                    for h in srv.history),
@@ -693,6 +785,26 @@ def scenario_census(scenario: FLScenario, params=None) -> dict:
              "round_wall_time": max(per_client_T[c] for c in ids),
              "uplink_bytes": sum(per_client_bytes[c] for c in ids)}
             for e, ids in enumerate(topo.edges)]
+    flt = scenario.faults
+    if flt is not None:
+        # analytic fault expectations (host arithmetic only): steady-state
+        # availability = diurnal duty x P(no crash in the rejoin window)
+        duty = 1.0
+        if flt.period > 0:
+            import math
+            duty = math.ceil(flt.duty_cycle * flt.period) / flt.period
+        p_up = duty * (1.0 - flt.churn_rate) ** flt.rejoin_after
+        out["faults"] = {
+            "availability_expected": p_up,
+            "dropout_rate": flt.dropout_rate,
+            "corrupt_rate": flt.corrupt_rate,
+            "expected_participants_per_round":
+                n_sel * p_up * (1.0 - flt.dropout_rate),
+            "finite_guard": flt.finite_guard,
+            "clip_norm": flt.clip_norm,
+            "max_retry_delay_s": sum(flt.retry_backoff * 2.0 ** a
+                                     for a in range(flt.max_retries)),
+        }
     timing = scenario.timing
     if isinstance(timing, AsyncBuffered):
         out["buffer_size"] = timing.buffer_size

@@ -61,6 +61,41 @@ def dispatch_time(base: float, jitter: float, seed: int,
     return float(base) * float(np.exp(jitter * rng.standard_normal()))
 
 
+_RETRY_TAG = 16     # rng stream tag — disjoint from core.faults' tags 11–15
+
+
+@dataclass(frozen=True)
+class RetrySpec:
+    """Upload-loss model for the virtual clock (DESIGN.md §17): each
+    upload attempt is lost with probability ``drop_rate``; attempt ``a``'s
+    retransmission waits ``backoff * 2**a`` seconds. After ``max_retries``
+    losses the final attempt always lands — DELAYS, never losses, which
+    preserves the scheduler's one-in-flight-upload-per-client invariant
+    (and with it the heap ≡ materializer element-wise identity: both add
+    the same per-``(seed, client, dispatch)`` delay to the same arrival).
+    """
+    drop_rate: float
+    backoff: float
+    max_retries: int
+    seed: int = 0
+
+    def delay(self, client: int, dispatch: int) -> float:
+        """Total retry delay for a client's ``dispatch``-th upload: a pure
+        function of ``(seed, client, dispatch)``, independent of event
+        interleaving, exactly like :func:`dispatch_time`'s jitter."""
+        if self.drop_rate <= 0.0 or self.max_retries == 0:
+            return 0.0
+        draws = np.random.default_rng(
+            [self.seed, _RETRY_TAG, client, dispatch]
+        ).random(self.max_retries)
+        delay = 0.0
+        for a, u in enumerate(draws):
+            if u >= self.drop_rate:
+                break               # attempt ``a`` got through
+            delay += self.backoff * 2.0 ** a
+        return delay
+
+
 class VirtualClockScheduler:
     """Event-driven async FL schedule over analytic client round times.
 
@@ -73,7 +108,8 @@ class VirtualClockScheduler:
     """
 
     def __init__(self, times: Sequence[float], buffer_size: int,
-                 seed: int = 0, jitter: float = 0.0):
+                 seed: int = 0, jitter: float = 0.0,
+                 retry: RetrySpec | None = None):
         times = [float(t) for t in times]
         if not times:
             raise ValueError("need at least one client")
@@ -88,6 +124,7 @@ class VirtualClockScheduler:
         self.buffer_size = buffer_size
         self.seed = seed
         self.jitter = jitter
+        self.retry = retry
         self.version = 0
         self._seq = 0
         self._dispatches = [0] * len(times)     # per-client dispatch count
@@ -104,6 +141,8 @@ class VirtualClockScheduler:
         self._dispatches[client] += 1
         t = start + dispatch_time(self.times[client], self.jitter,
                                   self.seed, client, k)
+        if self.retry is not None:
+            t += self.retry.delay(client, k)
         heapq.heappush(self._heap, (t, self._seq, client, self.version))
         self._seq += 1
 
@@ -213,6 +252,8 @@ def materialize_windows(sched: VirtualClockScheduler,
         for c in sel:
             t[c] = t_agg + dispatch_time(sched.times[c], sched.jitter,
                                          sched.seed, int(c), disp[c])
+            if sched.retry is not None:
+                t[c] += sched.retry.delay(int(c), disp[c])
             seq[c] = next_seq
             ver[c] = v0 + w + 1
             disp[c] += 1

@@ -20,6 +20,20 @@ and optionally shard the edge grids over a device mesh::
     sc = FLScenario(fleet=FleetSpec.cycling(tiers, 100_000, edges=8))
     result = simulate(sc, 30, engine="scan", mesh=make_edge_mesh(8))
 
+Resilience (DESIGN.md §17): a :class:`FaultPolicy` layers availability
+traces, mid-round dropouts, corrupted uploads and the server-side
+defenses over any scenario, and ``simulate(..., checkpoint_every=N,
+checkpoint_dir=...)`` / ``resume_from=...`` make runs durable — a
+killed-and-resumed trajectory is BITWISE the uninterrupted one::
+
+    from repro.fl import FaultPolicy, FLScenario, simulate
+
+    sc = FLScenario(fleet=spec, faults=FaultPolicy(
+        period=24, duty_cycle=0.7, churn_rate=0.05,
+        dropout_rate=0.1, corrupt_rate=0.01))
+    simulate(sc, 1000, checkpoint_every=100, checkpoint_dir="ckpt/")
+    simulate(sc, 1000, resume_from="ckpt/")   # continues after a kill
+
 The seed's mesh/sharding infrastructure is part of this surface too:
 :func:`make_host_mesh` / :func:`batch_axes` (``launch/mesh.py``) build
 general ``("data", "model")`` meshes, and :func:`param_spec_tree` /
@@ -31,7 +45,13 @@ from repro.core.compression import (CompressionPlan, DEVICE_TIERS,
                                     SubmodelSpec, default_tier_plans,
                                     expand_update, slice_submodel,
                                     submodel_spec)  # noqa: F401
-from repro.core.engine import ScanEngine, simulate_rounds  # noqa: F401
+from repro.checkpoint import (Checkpointer, load_pytree,
+                              save_pytree)  # noqa: F401
+from repro.checkpoint.state import (latest_run_step, restore_run_state,
+                                    save_run_state)  # noqa: F401
+from repro.core.engine import (ScanEngine, WindowScanEngine,
+                               simulate_rounds)  # noqa: F401
+from repro.core.faults import FaultPolicy  # noqa: F401
 from repro.core.federated import (AsyncFLServer, Client, Cohort,
                                   CohortFLServer, FLServer,
                                   build_cohorts)  # noqa: F401

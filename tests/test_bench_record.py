@@ -32,18 +32,20 @@ def test_record_top_level_schema(record):
     assert record["kind"] == "fl_bench"
     for key in ("commit", "dirty", "backend", "python", "config",
                 "rounds_per_sec", "rounds_per_sec_structured",
-                "rounds_per_sec_sharded",
+                "rounds_per_sec_sharded", "rounds_per_sec_faults",
                 "windows_per_sec", "speedup_scan_vs_eager",
                 "speedup_async_scan_vs_eager",
                 "speedup_structured_fused_vs_scan",
                 "speedup_width_vs_masked_step",
-                "scaling_efficiency", "cross_shard_bytes", "rows"):
+                "scaling_efficiency", "cross_shard_bytes",
+                "fault_overhead", "rows"):
         assert key in record, key
     assert isinstance(record["dirty"], bool)
     cfg = record["config"]
     for key in ("clients", "plans", "rounds", "async_buffer",
                 "async_windows", "shard_clients", "shard_edges",
-                "shard_devices", "shard_rounds"):
+                "shard_devices", "shard_rounds", "fault_clients",
+                "fault_rounds"):
         assert isinstance(cfg[key], int) and cfg[key] > 0, key
 
 
@@ -51,6 +53,7 @@ def test_record_rate_sections(record):
     for section, paths in (("rounds_per_sec", ("eager", "scan", "pallas")),
                            ("rounds_per_sec_structured", ("scan", "fused")),
                            ("rounds_per_sec_sharded", ("scan", "mesh")),
+                           ("rounds_per_sec_faults", ("clean", "faulty")),
                            ("windows_per_sec", ("eager", "scan"))):
         for path in paths:
             rate = record[section][path]
@@ -62,10 +65,12 @@ def test_record_rows_schema(record):
     rows = record["rows"]
     n = record["config"]["clients"]
     sn = record["config"]["shard_clients"]
+    fn = record["config"]["fault_clients"]
     for name in (f"fl/engine_eager_{n}", f"fl/engine_scan_{n}",
                  f"fl/async_scan_eager_{n}", f"fl/async_scan_engine_{n}",
                  f"fl/submodel_pallas_scan_{n}",
                  f"fl/submodel_pallas_fused_{n}",
+                 f"fl/fault_clean_{fn}", f"fl/fault_faulty_{fn}",
                  f"fl/shard_scan_{sn}", f"fl/shard_mesh_{sn}"):
         assert name in rows, name
     for name, row in rows.items():
@@ -136,6 +141,24 @@ def test_record_shard_acceptance(record):
     assert int(derived["mesh"]["mesh_devices"]) >= 1
     assert derived["mesh"]["cross_shard_bytes"] == derived["scan"][
         "cross_shard_bytes"]
+
+
+def test_record_fault_acceptance(record):
+    """The ISSUE-9 acceptance floor: the fault machinery (host mask
+    sampling, corruption injection, finite-guard quarantine and the
+    coverage denominator) costs at most 10% over the clean scan path at
+    256 clients with 10% churn + 1% corrupted uploads, and the faulty
+    arm really exercised corruption (non-zero injected uploads)."""
+    assert 0.0 < record["fault_overhead"] <= 1.10
+    rows = record["rows"]
+    fn = record["config"]["fault_clients"]
+    derived = dict(kv.split("=")
+                   for kv in rows[f"fl/fault_faulty_{fn}"]["derived"]
+                   .split(";"))
+    assert float(derived["churn"]) > 0
+    assert float(derived["corrupt"]) > 0
+    assert int(derived["n_corrupt"]) > 0
+    assert derived["overhead_vs_clean"].endswith("x")
 
 
 def test_record_commit_vintage(record):

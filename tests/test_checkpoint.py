@@ -1,0 +1,212 @@
+"""Durable runs (DESIGN.md §17): pytree checkpointer round-trips
+(mixed dtypes incl. bf16, retention, latest-step discovery) and
+kill-and-resume BIT-IDENTITY — a run checkpointed, killed, and resumed
+must reproduce the uninterrupted trajectory bitwise for every runtime
+(per-client, cohort, width-sliced, async-buffered) on both the eager
+and scan engines."""
+import functools
+import json
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import Checkpointer, load_pytree, save_pytree
+from repro.checkpoint.state import (latest_run_step, restore_run_state,
+                                    save_run_state)
+from repro.configs.paper_mlp import config
+from repro.core.faults import FaultPolicy
+from repro.core.scenario import (AsyncBuffered, FleetSpec, FLScenario,
+                                 LocalTraining, ParticipationPolicy,
+                                 SyncWait, UploadPolicy, build_server,
+                                 simulate)
+from repro.models import mlp
+
+KEY = jax.random.PRNGKey(42)
+MODEL = types.SimpleNamespace(loss_fn=functools.partial(mlp.loss_fn))
+TIERS = ("hub", "high", "mid", "low", "mid", "low")
+FLEET = FleetSpec.cycling(TIERS, 6, samples_per_client=16)
+
+LOCAL = LocalTraining(mode="fedavg", local_steps=2, local_lr=0.1)
+EF = UploadPolicy(quant="fp8_e4m3", error_feedback=True)
+SYNC_FAULTS = FaultPolicy(seed=5, period=4, duty_cycle=0.75, churn_rate=0.1,
+                          dropout_rate=0.2, corrupt_rate=0.3,
+                          corrupt_kind="nan")
+ASYNC_FAULTS = FaultPolicy(seed=5, dropout_rate=0.2, retry_backoff=0.5,
+                           max_retries=3, corrupt_rate=0.3,
+                           corrupt_kind="inf")
+
+
+def _max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------- pytree checkpointer (unit)
+
+class TestCheckpointer:
+    def _tree(self):
+        return {
+            "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) * 0.1,
+            "half": jnp.asarray([1.5, -2.25], jnp.bfloat16),
+            "ints": jnp.arange(5, dtype=jnp.int32),
+            "nested": {"a": (jnp.ones((2, 2), jnp.float16),
+                             jnp.asarray([3], jnp.int32))},
+        }
+
+    def test_mixed_dtype_round_trip(self, tmp_path):
+        tree = self._tree()
+        p = str(tmp_path / "t.npz")
+        save_pytree(tree, p)
+        out = load_pytree(jax.tree.map(jnp.zeros_like, tree), p)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype
+            # bitwise: compare the raw representation, not values
+            av = np.asarray(a).view(np.uint8)
+            bv = np.asarray(b).view(np.uint8)
+            assert (av == bv).all()
+
+    def test_bf16_survives_npz(self, tmp_path):
+        tree = {"x": jnp.asarray([1.0, 3.140625, -0.007812], jnp.bfloat16)}
+        p = str(tmp_path / "b.npz")
+        save_pytree(tree, p)
+        out = load_pytree({"x": jnp.zeros(3, jnp.bfloat16)}, p)
+        assert out["x"].dtype == jnp.bfloat16
+        assert (np.asarray(out["x"]).view(np.uint16)
+                == np.asarray(tree["x"]).view(np.uint16)).all()
+
+    def test_missing_leaf_and_shape_mismatch(self, tmp_path):
+        p = str(tmp_path / "t.npz")
+        save_pytree({"x": jnp.ones(3)}, p)
+        with pytest.raises(KeyError, match="missing leaf"):
+            load_pytree({"y": jnp.ones(3)}, p)
+        with pytest.raises(ValueError, match="shape mismatch"):
+            load_pytree({"x": jnp.ones(4)}, p)
+
+    def test_retention_and_latest(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        assert ck.latest_step() is None
+        for s in (1, 5, 9):
+            ck.save({"x": jnp.full(2, float(s))}, s)
+        assert ck.latest_step() == 9
+        files = sorted(os.listdir(str(tmp_path)))
+        assert files == ["ckpt_00000005.npz", "ckpt_00000009.npz"]
+        restored, step = ck.restore({"x": jnp.zeros(2)})
+        assert step == 9 and float(restored["x"][0]) == 9.0
+
+
+# --------------------------------------------- run state (server-level)
+
+class TestRunState:
+    def test_latest_run_step_and_retention(self, tmp_path):
+        sc = FLScenario(fleet=FLEET)
+        srv = build_server(sc, MODEL, optim.sgd(1.0),
+                           mlp.init(KEY, config()))
+        d = str(tmp_path)
+        assert latest_run_step(d) is None
+        for _ in range(5):
+            srv.round()
+            save_run_state(srv, d, scenario=sc, keep=2)
+        assert latest_run_step(d) == 5
+        steps = sorted({int(f[6:14]) for f in os.listdir(d)
+                        if f.startswith("state_")})
+        assert steps == [4, 5]                      # keep=2 pairs only
+
+    def test_scenario_mismatch_raises(self, tmp_path):
+        sc = FLScenario(fleet=FLEET, faults=ASYNC_FAULTS,
+                        timing=AsyncBuffered(buffer_size=2,
+                                             staleness_exp=0.5))
+        d = str(tmp_path)
+        simulate(sc, 3, init_seed=3, checkpoint_every=3, checkpoint_dir=d)
+        other = FLScenario(fleet=FLEET, faults=ASYNC_FAULTS,
+                           timing=AsyncBuffered(buffer_size=2,
+                                                staleness_exp=0.25))
+        with pytest.raises(ValueError, match="scenario mismatch"):
+            simulate(other, 6, init_seed=3, resume_from=d)
+
+    def test_server_kind_mismatch_raises(self, tmp_path):
+        sc = FLScenario(fleet=FLEET)
+        d = str(tmp_path)
+        simulate(sc, 2, init_seed=3, checkpoint_every=2, checkpoint_dir=d)
+        srv = build_server(FLScenario(fleet=FLEET, runtime="client"),
+                           MODEL, optim.sgd(1.0), mlp.init(KEY, config()))
+        with pytest.raises(ValueError, match="cannot restore into"):
+            restore_run_state(srv, d)
+
+    def test_json_sidecar_is_the_commit_marker(self, tmp_path):
+        sc = FLScenario(fleet=FLEET)
+        d = str(tmp_path)
+        simulate(sc, 2, init_seed=3, checkpoint_every=2, checkpoint_dir=d)
+        step = latest_run_step(d)
+        meta = json.load(open(os.path.join(d, f"state_{step:08d}.json")))
+        assert meta["step"] == step
+        # a torn write (npz without json) must be invisible to discovery
+        open(os.path.join(d, "state_00000099.npz"), "wb").close()
+        assert latest_run_step(d) == step
+
+
+# ------------------------------------- kill-and-resume bit-identity
+
+def _kill_and_resume(scenario, rounds, every, engine, init_seed=3):
+    """Reference run vs (partial run -> kill -> resume): params must be
+    bitwise identical and every record equal."""
+    import shutil
+    import tempfile
+    d = tempfile.mkdtemp()
+    try:
+        full = simulate(scenario, rounds, init_seed=init_seed,
+                        engine=engine)
+        cut = max(every, rounds // 2)
+        simulate(scenario, cut, init_seed=init_seed, engine=engine,
+                 checkpoint_every=every, checkpoint_dir=d)
+        res = simulate(scenario, rounds, init_seed=init_seed, engine=engine,
+                       checkpoint_every=every, resume_from=d)
+        assert _max_diff(full.params, res.params) == 0.0
+        assert len(full.records) == len(res.records)
+        for a, b in zip(full.records, res.records):
+            assert a == b
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+class TestKillAndResume:
+    def test_per_client_runtime_faults_ef(self):
+        _kill_and_resume(FLScenario(
+            fleet=FLEET, runtime="client", local=LOCAL, upload=EF,
+            faults=SYNC_FAULTS), rounds=6, every=2, engine="eager")
+
+    def test_cohort_runtime_faults_ef(self):
+        _kill_and_resume(FLScenario(
+            fleet=FLEET, local=LOCAL, upload=EF,
+            participation=ParticipationPolicy(fraction=0.8, seed=7),
+            faults=SYNC_FAULTS), rounds=6, every=2, engine="eager")
+
+    def test_width_sliced_clean(self):
+        _kill_and_resume(FLScenario(
+            fleet=FLEET,
+            local=LocalTraining(mode="fedavg", local_steps=2,
+                                local_lr=0.1, submodel="width"),
+            participation=ParticipationPolicy(fraction=0.8, seed=7)),
+            rounds=6, every=2, engine="eager")
+
+    def test_async_runtime_faults_ef(self):
+        _kill_and_resume(FLScenario(
+            fleet=FLEET, local=LOCAL, upload=EF,
+            timing=AsyncBuffered(buffer_size=2, staleness_exp=0.5),
+            faults=ASYNC_FAULTS), rounds=8, every=3, engine="eager")
+
+    def test_scan_engine_sync_faults(self):
+        _kill_and_resume(FLScenario(
+            fleet=FLEET, local=LOCAL, upload=EF,
+            participation=ParticipationPolicy(fraction=0.7, seed=7),
+            faults=SYNC_FAULTS), rounds=6, every=2, engine="scan")
+
+    def test_scan_engine_async_faults(self):
+        _kill_and_resume(FLScenario(
+            fleet=FLEET, local=LOCAL, upload=EF,
+            timing=AsyncBuffered(buffer_size=3, staleness_exp=0.5),
+            faults=ASYNC_FAULTS), rounds=8, every=3, engine="scan")

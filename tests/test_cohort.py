@@ -176,14 +176,14 @@ def test_empty_round_leaves_params_untouched():
     rec = coh.round(participation=[np.zeros(c.size, bool)
                                    for c in coh.cohorts])
     assert rec["n_participants"] == 0
-    assert np.isnan(rec["loss"])
+    assert rec["loss"] is None            # empty round: no NaN sentinel
     assert _max_diff(p0, coh.params) == 0.0
 
 
 def test_all_dropped_round_is_bit_identical_noop_that_advances_step():
     """A deadline below every tier's round time drops the whole fleet:
     params AND opt_state must be bit-identical (no optimizer step ran on
-    a zero accumulator), the loss NaN, and the step counter still
+    a zero accumulator), the loss None, and the step counter still
     advances — pins the empty-round path of CohortFLServer.round."""
     times = _tier_times()
     coh = CohortFLServer.from_clients(
@@ -195,7 +195,7 @@ def test_all_dropped_round_is_bit_identical_noop_that_advances_step():
     rec = coh.round()
     assert rec["n_participants"] == 0
     assert rec["n_dropped"] == len(FLEET)
-    assert np.isnan(rec["loss"])
+    assert rec["loss"] is None            # empty round: no NaN sentinel
     assert rec["step"] == 1 and coh.step == 1       # clock still advances
     for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(coh.params)):
         np.testing.assert_array_equal(a, np.asarray(b))
